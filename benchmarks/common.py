@@ -1,0 +1,102 @@
+"""Shared benchmark scaffolding: timing, CSV emission, tiny fed problems."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import make_image_classification, dirichlet_partition
+from repro.models.vision import (
+    init_cnn, cnn_apply, init_vit, vit_apply, classification_loss, accuracy,
+)
+from repro.fed import FedConfig, FederatedExperiment
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def make_fed_vision_problem(*, model: str = "cnn", n: int = 3000,
+                            image_size: int = 12, n_classes: int = 8,
+                            n_clients: int = 10, alpha: float = 0.1,
+                            seed: int = 0, batch: int = 16,
+                            noise: float = 2.5):
+    """Dirichlet-partitioned synthetic image task + model + loss/eval fns."""
+    n_test = 768
+    X_all, y_all = make_image_classification(n + n_test,
+                                             image_size=image_size,
+                                             n_classes=n_classes, seed=seed,
+                                             noise=noise)
+    X, y = X_all[:n], y_all[:n]
+    Xe, ye = jnp.asarray(X_all[n:]), jnp.asarray(y_all[n:])
+    if alpha is None:  # IID
+        rng = np.random.default_rng(seed)
+        idx = rng.permutation(n)
+        parts = np.array_split(idx, n_clients)
+    else:
+        parts = dirichlet_partition(y, n_clients, alpha, seed=seed)
+
+    if model == "cnn":
+        params = init_cnn(jax.random.key(seed), n_classes=n_classes, width=8,
+                          blocks=2)
+        apply = cnn_apply
+    else:
+        params, meta = init_vit(jax.random.key(seed), image_size=image_size,
+                                patch=4, d_model=48, layers=2, heads=2,
+                                n_classes=n_classes)
+        apply = lambda p, x: vit_apply(p, meta, x)
+
+    def loss_fn(p, b):
+        return classification_loss(apply(p, b["x"]), b["y"])
+
+    @jax.jit
+    def eval_logits(p):
+        return apply(p, Xe)
+
+    def eval_fn(p):
+        logits = eval_logits(p)
+        return {"test_acc": accuracy(logits, ye),
+                "test_loss": classification_loss(logits, ye)}
+
+    def batch_fn(cid, rng):
+        # fixed size (with replacement) so cohort batches stack
+        idx = rng.choice(parts[cid], size=batch, replace=True)
+        return {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return params, loss_fn, batch_fn, eval_fn
+
+
+# per-task-tuned lrs (the paper grid-searches per optimizer; Sophia's clip
+# makes its LM lr far too small for the small vision task)
+VISION_LRS = {"sophia": 2e-2}
+
+
+def run_algorithm(algo: str, params, loss_fn, batch_fn, eval_fn, *,
+                  n_clients=10, participation=0.5, rounds=20, local_steps=5,
+                  lr=None, beta=0.5, seed=0, svd_rank=8):
+    if lr is None and "sophia" in algo:
+        lr = VISION_LRS["sophia"]
+    fed = FedConfig(algorithm=algo, n_clients=n_clients,
+                    participation=participation, rounds=rounds,
+                    local_steps=local_steps, lr=lr, beta=beta, seed=seed,
+                    svd_rank=svd_rank)
+    exp = FederatedExperiment(fed, params, loss_fn, batch_fn, eval_fn)
+    t0 = time.perf_counter()
+    hist = exp.run()
+    wall = time.perf_counter() - t0
+    return exp, hist, wall

@@ -1,0 +1,40 @@
+"""Fig. 3 reproduction: preconditioner drift (Def. 1) of Local SOAP vs
+FedPAC_SOAP across rounds, plus rounds-to-accuracy-threshold.
+
+Claims: (i) FedPAC reduces *normalized* drift ||Theta_i - mean|| / ||mean||;
+(ii) lower drift correlates with reaching the accuracy threshold sooner.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_fed_vision_problem, run_algorithm, emit
+
+
+def run(quick: bool = True):
+    rounds = 30 if quick else 60
+    out = {}
+    for algo in ["local_soap", "fedpac_soap"]:
+        params, loss_fn, batch_fn, eval_fn = make_fed_vision_problem(
+            alpha=0.1, n_clients=10, seed=1)
+        exp, hist, wall = run_algorithm(algo, params, loss_fn, batch_fn,
+                                        eval_fn, rounds=rounds, local_steps=5)
+        accs = [h["test_acc"] for h in hist]
+        drifts = [h["drift"] for h in hist]
+        thresh = 0.30
+        reach = next((i + 1 for i, a in enumerate(accs) if a >= thresh),
+                     None)
+        out[algo] = dict(acc=accs[-1], drift_final=drifts[-1],
+                         drift_mean=float(np.mean(drifts)), reach=reach)
+        emit(f"fig3_{algo}", wall / rounds * 1e6,
+             f"acc={accs[-1]:.4f};mean_drift={np.mean(drifts):.3e};"
+             f"rounds_to_{thresh}={reach}")
+    emit("fig3_claim_drift_accel", 0.0,
+         f"fedpac_acc={out['fedpac_soap']['acc']:.4f};"
+         f"local_acc={out['local_soap']['acc']:.4f};"
+         f"fedpac_faster={out['fedpac_soap']['acc'] >= out['local_soap']['acc']}")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,58 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default mode is sized for a
+single-CPU container; pass --full for paper-scale rounds.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale rounds (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table1,table1_vit,fig3,"
+                         "table3,table4,table5,table6")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (table1_noniid, fig3_drift, table3_llm,
+                            table4_beta, table5_ablation, table6_comm,
+                            seed_robustness)
+    from benchmarks.common import emit
+
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    jobs = [
+        ("table1", lambda: table1_noniid.run(quick=quick, model="cnn")),
+        ("table1_vit", lambda: table1_noniid.run(quick=quick, model="vit")),
+        ("fig3", lambda: fig3_drift.run(quick=quick)),
+        ("table3", lambda: table3_llm.run(quick=quick)),
+        ("table4", lambda: table4_beta.run(quick=quick)),
+        ("table5", lambda: table5_ablation.run(quick=quick)),
+        ("table6", lambda: table6_comm.run(quick=quick)),
+        ("robust", lambda: seed_robustness.run(quick=quick)),
+    ]
+    failures = 0
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            emit(f"{name}_ERROR", 0.0, f"{type(e).__name__}:{str(e)[:120]}")
+    emit("total_wall_s", (time.perf_counter() - t0) * 1e6,
+         f"failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

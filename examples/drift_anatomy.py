@@ -1,0 +1,54 @@
+"""Drift anatomy: reproduce the paper's Fig. 3 mechanism on a quadratic.
+
+Shows layer-wise preconditioner drift (Def. 1) growing with heterogeneity for
+naive FedSOA and being suppressed by FedPAC alignment — with the drift term
+printed alongside the convergence gap, making the Thm 5.6 coupling visible.
+
+  PYTHONPATH=src python examples/drift_anatomy.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import make_variant_round_fn, init_server
+
+D, OUT, C, K = 16, 8, 8, 6
+key = jax.random.key(0)
+W = jax.random.normal(key, (D, OUT))
+
+def make_clients(hetero):
+    mats = []
+    for i in range(C):
+        k1, k2 = jax.random.split(jax.random.key(i + 1))
+        Q, _ = jnp.linalg.qr(jax.random.normal(k1, (D, D)))
+        s = jnp.exp(jax.random.uniform(k2, (D,), minval=-hetero, maxval=hetero))
+        mats.append(Q * s)
+    return mats
+
+def batches(mats, key):
+    ks = jax.random.split(key, C)
+    Xs = jnp.stack([jax.random.normal(ks[i], (K, 16, D)) @ mats[i]
+                    for i in range(C)])
+    return Xs, jnp.einsum("ckbd,do->ckbo", Xs, W)
+
+def loss_fn(p, batch):
+    X, Y = batch
+    return jnp.mean((X @ p["w"] - Y) ** 2)
+
+print(f"{'hetero':>7} {'variant':>10} {'final_loss':>11} {'drift':>10}")
+for hetero in [0.2, 1.0, 2.0]:
+    mats = make_clients(hetero)
+    for variant in ["fedsoa", "fedpac"]:
+        opt = optim.make("soap")
+        rf = make_variant_round_fn(variant, loss_fn, opt, lr=0.05,
+                                   local_steps=K, beta=0.5)
+        server = init_server({"w": jnp.zeros((D, OUT))}, opt)
+        rng = jax.random.key(7)
+        for _ in range(50):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            server, m = rf(server, batches(mats, k1), k2)
+        print(f"{hetero:7.1f} {variant:>10} {float(m['loss']):11.5f} "
+              f"{float(m['drift']):10.3e}")

@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + KV-cache decode on three architecture
+families (dense GQA, SSM, hybrid recurrent).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    for arch in ["smollm-360m", "falcon-mamba-7b", "recurrentgemma-2b"]:
+        print(f"=== {arch} (reduced) ===")
+        serve.main(["--arch", arch, "--reduced", "--batch", "2",
+                    "--prompt-len", "16", "--gen", "8"])

@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (
+    save_pytree, load_pytree, save_server_state, load_server_state,
+    latest_step, CheckpointManager,
+)

@@ -1,0 +1,141 @@
+"""Checkpointing: pytree <-> .npz with path-keyed entries.
+
+Self-contained (no orbax dependency): leaves are stored under
+'/'-joined tree paths, dtypes/shapes preserved exactly, atomic rename on
+write.  Covers params, optimizer states (incl. None-masked leaves), and the
+full federated ServerState (params + Theta + g_G + round counter).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.server import ServerState
+
+_NONE_SENTINEL = "__none__"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path) or "__root__"
+        out[key] = leaf
+    return out
+
+
+def save_pytree(tree, path: str):
+    """Atomic save. None leaves are preserved (masked optimizer states)."""
+    entries = _flatten(tree)
+    arrays = {}
+    meta = {"none_keys": [], "order": list(entries), "dtypes": {}}
+    for k, v in entries.items():
+        if v is None:
+            meta["none_keys"].append(k)
+            continue
+        arr = np.asarray(v)
+        if arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            # npz has no native bf16/fp8: store raw bits + dtype in meta
+            meta["dtypes"][k] = arr.dtype.name
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        arrays[k] = arr
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=np.frombuffer(
+                json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(template, path: str):
+    """Load into the structure of ``template`` (shapes/dtypes validated)."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        none_keys = set(meta["none_keys"])
+        entries = _flatten(template)
+        leaves = []
+        import ml_dtypes
+        for k, tmpl in entries.items():
+            if k in none_keys:
+                leaves.append(None)
+                continue
+            arr = z[k]
+            if k in meta.get("dtypes", {}):
+                arr = arr.view(getattr(ml_dtypes, meta["dtypes"][k]))
+            if tmpl is not None and hasattr(tmpl, "shape"):
+                assert tuple(arr.shape) == tuple(tmpl.shape), \
+                    f"{k}: {arr.shape} != {tmpl.shape}"
+                arr = jnp.asarray(arr).astype(tmpl.dtype)
+            leaves.append(jnp.asarray(arr))
+    treedef = jax.tree_util.tree_structure(
+        template, is_leaf=lambda x: x is None)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_server_state(server: ServerState, directory: str, step: int):
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    save_pytree(server.params, os.path.join(d, "params.npz"))
+    save_pytree(server.g_global, os.path.join(d, "g_global.npz"))
+    if server.theta is not None:
+        save_pytree(server.theta, os.path.join(d, "theta.npz"))
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        json.dump({"round": server.round,
+                   "has_theta": server.theta is not None}, f)
+
+
+def load_server_state(template: ServerState, directory: str,
+                      step: Optional[int] = None) -> ServerState:
+    step = latest_step(directory) if step is None else step
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    params = load_pytree(template.params, os.path.join(d, "params.npz"))
+    gg = load_pytree(template.g_global, os.path.join(d, "g_global.npz"))
+    theta = None
+    if meta["has_theta"] and template.theta is not None:
+        theta = load_pytree(template.theta, os.path.join(d, "theta.npz"))
+    return ServerState(params, theta, gg, meta["round"])
+
+
+def latest_step(directory: str) -> int:
+    steps = [int(n.split("_")[1]) for n in os.listdir(directory)
+             if n.startswith("step_")]
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    return max(steps)
+
+
+class CheckpointManager:
+    """Keep-last-N rotation for federated round checkpoints."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, server: ServerState):
+        save_server_state(server, self.directory, server.round)
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(self.directory)
+                       if n.startswith("step_"))
+        for s in steps[: -self.keep]:
+            d = os.path.join(self.directory, f"step_{s:08d}")
+            for fn in os.listdir(d):
+                os.unlink(os.path.join(d, fn))
+            os.rmdir(d)
+
+    def restore(self, template: ServerState) -> ServerState:
+        return load_server_state(template, self.directory)

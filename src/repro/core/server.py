@@ -1,0 +1,40 @@
+"""Server-side aggregation (Alg. 2 lines 14-17).
+
+Cohort results arrive stacked on a leading client axis (from vmap); on the
+production mesh that axis is sharded over ("pod","data"), so every mean here
+lowers to an all-reduce — the paper's server round-trip becomes a collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ServerState:
+    params: Any
+    theta: Any          # global preconditioner reference Theta^r (or None)
+    g_global: Any       # estimated global direction g_G^r
+    round: int = 0
+
+
+def aggregate_round(server: ServerState, deltas, thetas, *, lr: float,
+                    local_steps: int, server_lr: float = 1.0) -> ServerState:
+    """deltas/thetas: pytrees with leading client axis (stacked)."""
+    mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+    new_params = jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) + server_lr * d).astype(p.dtype),
+        server.params, mean_delta)
+    # g_G^{r+1} = -(1/(S K eta)) sum_i Delta x_i  (Alg. 2 line 14)
+    g_global = jax.tree.map(lambda d: -d / (local_steps * lr), mean_delta)
+    theta = jax.tree.map(lambda t: jnp.mean(t, axis=0), thetas) \
+        if thetas is not None else None
+    return ServerState(new_params, theta, g_global, server.round + 1)
+
+
+def init_server(params, opt, g_dtype=jnp.float32) -> ServerState:
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, g_dtype), params)
+    return ServerState(params=params, theta=None, g_global=g0, round=0)

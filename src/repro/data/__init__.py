@@ -1,0 +1,2 @@
+from repro.data.partition import dirichlet_partition, heterogeneity_stat
+from repro.data.synth import make_image_classification, make_lm_corpus, lm_batches

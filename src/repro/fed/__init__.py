@@ -1,0 +1,2 @@
+from repro.fed.rounds import FedConfig, FederatedExperiment, parse_algorithm
+from repro.fed.scaffold import make_scaffold_round_fn, ScaffoldState

@@ -1,0 +1,158 @@
+"""Federated experiment runtime: client sampling, batch staging, round loop.
+
+Supports every algorithm in the paper's tables:
+  fedavg                         SGD locally, parameter averaging
+  scaffold                       control variates (fed/scaffold.py)
+  fedcm                          client momentum == correction-only + SGD
+  local_{adamw,sophia,muon,soap} FedSOA (Alg. 1) with that optimizer
+  fedpac_{sophia,muon,soap}      FedPAC (Alg. 2)
+  + component ablations (align_only / correct_only) and _light (SVD upload)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import (
+    make_round_fn, init_server, make_svd_codec, round_comm_bytes,
+)
+from repro.core.server import ServerState
+from repro.fed.scaffold import make_scaffold_round_fn, ScaffoldState
+
+
+@dataclasses.dataclass
+class FedConfig:
+    algorithm: str = "fedpac_soap"
+    n_clients: int = 20
+    participation: float = 0.2     # fraction sampled per round
+    rounds: int = 20
+    local_steps: int = 10          # K
+    batch_size: int = 16
+    lr: Optional[float] = None     # default: paper's per-optimizer lr
+    beta: float = 0.5              # FedPAC correction strength
+    hessian_freq: int = 10
+    svd_rank: int = 8              # for *_light variants
+    seed: int = 0
+    server_lr: float = 1.0
+
+
+def parse_algorithm(name: str):
+    """-> (optimizer_name, align, correct, light)."""
+    light = name.endswith("_light")
+    if light:
+        name = name[: -len("_light")]
+    if name == "fedavg":
+        return "sgd", False, False, light
+    if name == "scaffold":
+        return "scaffold", False, False, light
+    if name == "fedcm":
+        return "sgd", False, True, light
+    kind, _, opt_name = name.partition("_")
+    if kind == "local":
+        return opt_name, False, False, light
+    if kind == "fedpac":
+        return opt_name, True, True, light
+    if kind == "align":      # align_only_soap
+        return name.split("_")[-1], True, False, light
+    if kind == "correct":    # correct_only_soap
+        return name.split("_")[-1], False, True, light
+    raise ValueError(name)
+
+
+class FederatedExperiment:
+    """Drives R communication rounds of any algorithm over client datasets.
+
+    ``client_batch_fn(client_id, rng) -> batch pytree`` supplies one local
+    minibatch; batches for a round are stacked to (S, K, ...).
+    """
+
+    def __init__(self, fed: FedConfig, params, loss_fn: Callable,
+                 client_batch_fn: Callable, eval_fn: Optional[Callable] = None,
+                 opt_kwargs: Optional[dict] = None):
+        self.fed = fed
+        self.loss_fn = loss_fn
+        self.client_batch_fn = client_batch_fn
+        self.eval_fn = eval_fn
+        self.rng = np.random.default_rng(fed.seed)
+
+        opt_name, align, correct, light = parse_algorithm(fed.algorithm)
+        self.is_scaffold = opt_name == "scaffold"
+        lr = fed.lr or optim.DEFAULT_LR.get(opt_name, 1e-2)
+        self.lr = lr
+        if self.is_scaffold:
+            self.opt = optim.make("sgd")
+            self.round_fn = make_scaffold_round_fn(
+                loss_fn, lr=lr, local_steps=fed.local_steps,
+                n_clients=fed.n_clients, server_lr=fed.server_lr)
+            self.scaffold_state = ScaffoldState.init(params, fed.n_clients)
+        else:
+            self.opt = optim.make(opt_name, **(opt_kwargs or {}))
+            beta = fed.beta if correct else 0.0
+            if fed.algorithm == "fedcm":
+                beta = 0.9  # FedCM's (1 - alpha)
+            codec = make_svd_codec(fed.svd_rank) if light else None
+            self.round_fn = make_round_fn(
+                loss_fn, self.opt, lr=lr, local_steps=fed.local_steps,
+                beta=beta, align=align, correct=correct,
+                hessian_freq=fed.hessian_freq, server_lr=fed.server_lr,
+                compress_fn=codec)
+        self.server = init_server(params, self.opt)
+        self.align = align
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------ staging
+
+    def _sample_cohort(self):
+        s = max(1, int(round(self.fed.n_clients * self.fed.participation)))
+        return self.rng.choice(self.fed.n_clients, size=s, replace=False)
+
+    def _stage_batches(self, cohort):
+        """Stack per-client, per-step batches -> leading (S, K, ...) axes."""
+        per_client = []
+        for cid in cohort:
+            steps = [self.client_batch_fn(int(cid), self.rng)
+                     for _ in range(self.fed.local_steps)]
+            per_client.append(jax.tree.map(
+                lambda *xs: jnp.stack(xs), *steps))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+
+    # ------------------------------------------------------------ loop
+
+    def run_round(self):
+        cohort = self._sample_cohort()
+        batches = self._stage_batches(cohort)
+        key = jax.random.key(int(self.rng.integers(0, 2**31)))
+        if self.is_scaffold:
+            self.server, self.scaffold_state, metrics = self.round_fn(
+                self.server, self.scaffold_state, jnp.asarray(cohort), batches,
+                key)
+        else:
+            self.server, metrics = self.round_fn(self.server, batches, key)
+        rec = {k: float(v) for k, v in metrics.items()}
+        rec["round"] = self.server.round
+        if self.eval_fn is not None:
+            rec.update({k: float(v) for k, v in
+                        self.eval_fn(self.server.params).items()})
+        self.history.append(rec)
+        return rec
+
+    def run(self, rounds: Optional[int] = None, log_every: int = 0):
+        for r in range(rounds or self.fed.rounds):
+            rec = self.run_round()
+            if log_every and (r % log_every == 0):
+                print({k: round(v, 4) for k, v in rec.items()})
+        return self.history
+
+    # ------------------------------------------------------------ accounting
+
+    def comm_bytes_per_round(self) -> int:
+        theta = self.server.theta if self.align else None
+        _, _, _, light = parse_algorithm(self.fed.algorithm)
+        return round_comm_bytes(
+            self.server.params, theta,
+            compressed_rank=self.fed.svd_rank if light else None)

@@ -1,0 +1,50 @@
+"""Jitted wrapper: Newton–Schulz orthogonalization via the Pallas matmul.
+
+``newton_schulz(g, use_pallas=...)`` dispatches between the Pallas kernel
+(TPU target; interpret mode on CPU for validation) and the pure-jnp oracle.
+The default is the jnp path on CPU hosts, so optimizers transparently use the
+same API everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ns_ortho import ref
+from repro.kernels.ns_ortho.kernel import matmul_fused
+
+NS_COEFFS = ref.NS_COEFFS
+
+
+def ns_iteration_pallas(x, *, interpret: bool = True, block: int = 128):
+    """One quintic NS step via three fused Pallas matmuls. x: (m,n), m<=n."""
+    a, b, c = NS_COEFFS
+    kw = dict(bm=block, bk=block, bn=block, interpret=interpret)
+    xt = x.T
+    A = matmul_fused(x, xt, **kw)                       # X X^T
+    B = matmul_fused(A, A, aux=A, alpha=c, beta=b, **kw)  # c A^2 + b A
+    return matmul_fused(B, x, aux=x, alpha=1.0, beta=a, **kw)  # B X + a X
+
+
+def newton_schulz_pallas(g, steps: int = 5, eps: float = 1e-7, *,
+                         interpret: bool = True, block: int = 128):
+    transpose = g.shape[0] > g.shape[1]
+    x = g.T if transpose else g
+    x = x / (jnp.linalg.norm(x) + eps)
+    for _ in range(steps):
+        x = ns_iteration_pallas(x, interpret=interpret, block=block)
+    return x.T if transpose else x
+
+
+def newton_schulz(g, steps: int = 5, eps: float = 1e-7, *,
+                  use_pallas: bool = False, interpret: bool = True):
+    """Batched-aware NS orthogonalization; 3-D inputs vmap over dim 0."""
+    fn = (functools.partial(newton_schulz_pallas, steps=steps, eps=eps,
+                            interpret=interpret)
+          if use_pallas else
+          functools.partial(ref.newton_schulz, steps=steps, eps=eps))
+    if g.ndim == 3:  # (experts, m, n)
+        return jax.vmap(fn)(g)
+    return fn(g)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for Newton–Schulz orthogonalization (Muon's hot-spot).
+
+Quintic iteration from the Muon reference implementation:
+  X <- a X + (b A + c A^2) X,  A = X X^T
+coefficients (3.4445, -4.7750, 2.0315); input pre-scaled by Frobenius norm.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+def ns_iteration(x, coeffs=NS_COEFFS):
+    """One quintic Newton–Schulz step. x: (m, n) with m <= n."""
+    a, b, c = coeffs
+    xf = x.astype(jnp.float32)
+    aa = xf @ xf.T
+    bb = b * aa + c * (aa @ aa)
+    return (a * xf + bb @ xf).astype(x.dtype)
+
+
+def newton_schulz(g, steps: int = 5, eps: float = 1e-7):
+    """Orthogonalize g: (m, n). Returns approx orthogonal factor of g."""
+    transpose = g.shape[0] > g.shape[1]
+    x = g.T if transpose else g
+    x = x / (jnp.linalg.norm(x) + eps)
+    for _ in range(steps):
+        x = ns_iteration(x)
+    return x.T if transpose else x

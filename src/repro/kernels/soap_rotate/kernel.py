@@ -1,0 +1,68 @@
+"""Pallas TPU kernels for SOAP's rotated-space Adam.
+
+Two pieces:
+  * the two-sided rotations Q_L^T G Q_R / Q_L N Q_R^T reuse the blocked
+    ``matmul_fused`` kernel from kernels/ns_ortho (MXU work);
+  * ``adam_moments`` — fused elementwise moment update + normalized direction
+    (VPU work, single HBM pass for 3 reads / 3 writes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES = 8
+
+
+def _adam_kernel(g_ref, m_ref, v_ref, n_ref, m_out, v_out, *, b1, b2, eps):
+    g = g_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...].astype(jnp.float32) + (1 - b1) * g
+    v = b2 * v_ref[...].astype(jnp.float32) + (1 - b2) * g * g
+    n_ref[...] = (m / (jnp.sqrt(v) + eps)).astype(n_ref.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+    v_out[...] = v.astype(v_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "block",
+                                             "interpret"))
+def adam_moments(g, m, v, *, b1: float = 0.95, b2: float = 0.95,
+                 eps: float = 1e-8, block: int = 1024,
+                 interpret: bool = False):
+    """Fused rotated-space Adam moments. Returns (n, m', v') as f32."""
+    shape = g.shape
+    n_el = g.size
+    width = SUBLANES * LANES
+    rows = -(-n_el // width)
+    pad = rows * width - n_el
+
+    def prep(x):
+        flat = x.reshape(-1).astype(jnp.float32)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat.reshape(rows, width)
+
+    gp, mp, vp = prep(g), prep(m), prep(v)
+    bm = min(block // LANES, rows)
+    grid_rows = -(-rows // bm)
+    if rows % bm:
+        extra = grid_rows * bm - rows
+        gp, mp, vp = (jnp.pad(x, ((0, extra), (0, 0))) for x in (gp, mp, vp))
+
+    kern = functools.partial(_adam_kernel, b1=b1, b2=b2, eps=eps)
+    n_out, m_new, v_new = pl.pallas_call(
+        kern,
+        grid=(grid_rows,),
+        in_specs=[pl.BlockSpec((bm, width), lambda i: (i, 0))] * 3,
+        out_specs=[pl.BlockSpec((bm, width), lambda i: (i, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct(gp.shape, jnp.float32)] * 3,
+        interpret=interpret,
+    )(gp, mp, vp)
+
+    def post(x):
+        return x.reshape(-1)[:n_el].reshape(shape)
+
+    return post(n_out), post(m_new), post(v_new)

@@ -1,0 +1,25 @@
+"""Jitted wrapper: full SOAP rotated-Adam step composed from Pallas pieces.
+
+Rotations run on the MXU via the blocked matmul kernel; the moment update is
+one fused VPU pass.  ``use_pallas=False`` falls back to the jnp oracle.
+"""
+from __future__ import annotations
+
+from repro.kernels.ns_ortho.kernel import matmul_fused
+from repro.kernels.soap_rotate import ref
+from repro.kernels.soap_rotate.kernel import adam_moments
+
+
+def soap_rotated_update(g, ql, qr, m, v, *, b1: float = 0.95,
+                        b2: float = 0.95, eps: float = 1e-8,
+                        use_pallas: bool = False, interpret: bool = True,
+                        block: int = 128):
+    if not use_pallas:
+        return ref.soap_rotated_update(g, ql, qr, m, v, b1=b1, b2=b2, eps=eps)
+    kw = dict(bm=block, bk=block, bn=block, interpret=interpret)
+    g32 = g.astype(ql.dtype)
+    g_rot = matmul_fused(matmul_fused(ql.T, g32, **kw), qr, **kw)
+    n, m_new, v_new = adam_moments(g_rot, m, v, b1=b1, b2=b2, eps=eps,
+                                   interpret=interpret)
+    d = matmul_fused(matmul_fused(ql, n, **kw), qr.T, **kw)
+    return d, m_new, v_new

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for SOAP's rotated-space Adam step (Alg. 4 lines 13-21).
+
+Given gradient G, eigenbases (Q_L, Q_R), rotated moments (M, V):
+  G'  = Q_L^T G Q_R
+  M'  = b1 M + (1-b1) G'
+  V'  = b2 V + (1-b2) G'**2
+  N   = M' / (sqrt(V') + eps)
+  D   = Q_L N Q_R^T
+Returns (D, M', V').
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def soap_rotated_update(g, ql, qr, m, v, *, b1: float = 0.95,
+                        b2: float = 0.95, eps: float = 1e-8):
+    gf = g.astype(jnp.float32)
+    g_rot = ql.T @ gf @ qr
+    m_new = b1 * m + (1 - b1) * g_rot
+    v_new = b2 * v + (1 - b2) * g_rot * g_rot
+    n = m_new / (jnp.sqrt(v_new) + eps)
+    d = ql @ n @ qr.T
+    return d, m_new, v_new

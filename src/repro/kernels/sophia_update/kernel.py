@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused Sophia momentum + clipped preconditioned update.
+
+Memory-bound elementwise op: reads (g, m, h), writes (d, m') in one pass.
+Arrays are flattened and tiled to (8, 128)-multiple VMEM blocks (VPU lane
+layout); the last partial tile is handled by zero-padding outside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES = 8
+
+
+def _sophia_kernel(g_ref, m_ref, h_ref, d_ref, m_out_ref, *, b1, rho, eps):
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    m_new = b1 * m + (1.0 - b1) * g
+    d = jnp.clip(m_new / jnp.maximum(h, eps), -rho, rho)
+    d_ref[...] = d.astype(d_ref.dtype)
+    m_out_ref[...] = m_new.astype(m_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "rho", "eps", "block",
+                                             "interpret"))
+def sophia_update(g, m, h, *, b1: float = 0.9, rho: float = 0.05,
+                  eps: float = 1e-12, block: int = 1024,
+                  interpret: bool = False):
+    """Fused Sophia direction. Any-shape inputs; returns (d, m') f32."""
+    shape = g.shape
+    n = g.size
+    width = SUBLANES * LANES
+    rows = -(-n // width)
+    pad = rows * width - n
+
+    def prep(x):
+        flat = x.reshape(-1).astype(jnp.float32)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat.reshape(rows, width)
+
+    gp, mp, hp = prep(g), prep(m), prep(h)
+    bm = min(block // LANES, rows)
+    grid_rows = -(-rows // bm)
+    if rows % bm:
+        extra = grid_rows * bm - rows
+        gp = jnp.pad(gp, ((0, extra), (0, 0)))
+        mp = jnp.pad(mp, ((0, extra), (0, 0)))
+        hp = jnp.pad(hp, ((0, extra), (0, 0)))
+
+    kern = functools.partial(_sophia_kernel, b1=b1, rho=rho, eps=eps)
+    d, m_new = pl.pallas_call(
+        kern,
+        grid=(grid_rows,),
+        in_specs=[pl.BlockSpec((bm, width), lambda i: (i, 0))] * 3,
+        out_specs=[pl.BlockSpec((bm, width), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct(gp.shape, jnp.float32)] * 2,
+        interpret=interpret,
+    )(gp, mp, hp)
+    d = d.reshape(-1)[:n].reshape(shape)
+    m_new = m_new.reshape(-1)[:n].reshape(shape)
+    return d, m_new

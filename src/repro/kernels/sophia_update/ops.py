@@ -1,0 +1,14 @@
+"""Jitted wrapper for the fused Sophia update: Pallas on TPU (interpret mode
+for CPU validation) or the pure-jnp oracle."""
+from __future__ import annotations
+
+from repro.kernels.sophia_update import ref
+from repro.kernels.sophia_update.kernel import sophia_update as _pallas
+
+
+def sophia_update(g, m, h, *, b1: float = 0.9, rho: float = 0.05,
+                  eps: float = 1e-12, use_pallas: bool = False,
+                  interpret: bool = True):
+    if use_pallas:
+        return _pallas(g, m, h, b1=b1, rho=rho, eps=eps, interpret=interpret)
+    return ref.sophia_update(g, m, h, b1=b1, rho=rho, eps=eps)

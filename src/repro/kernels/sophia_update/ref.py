@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused Sophia update (Alg. 8 lines 7/17-18).
+
+Given gradient g, momentum m, Hessian-diag EMA h:
+  m' = b1 m + (1 - b1) g
+  d  = clip(m' / max(h, eps), -rho, rho)
+Returns (d, m').  One fused pass — the op is purely memory-bound, which is
+exactly why it is a Pallas kernel on TPU (single HBM round-trip instead of
+four).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sophia_update(g, m, h, *, b1: float = 0.9, rho: float = 0.05,
+                  eps: float = 1e-12):
+    gf = g.astype(jnp.float32)
+    m_new = b1 * m.astype(jnp.float32) + (1.0 - b1) * gf
+    d = jnp.clip(m_new / jnp.maximum(h.astype(jnp.float32), eps), -rho, rho)
+    return d, m_new

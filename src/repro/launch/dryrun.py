@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh and extract roofline terms.
+
+No device memory is allocated: params/optimizer states/caches are
+ShapeDtypeStructs (eval_shape), inputs likewise.  ``compile()`` proving the
+sharding story is the deliverable; memory_analysis/cost_analysis feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import (
+    make_production_mesh, PEAK_FLOPS_BF16, HBM_BW, ICI_BW,
+)
+from repro.launch import specs as S
+from repro.launch import steps as ST
+from repro import optim
+from repro.models import model as M
+from repro.sharding.partitioning import (
+    TRAIN_RULES, SERVE_RULES, SERVE_FSDP_RULES,
+)
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8}
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred)"
+                       r"\[([0-9,]*)\]")
+
+
+def collective_bytes_from_hlo(hlo: str):
+    """Sum result sizes of collective ops; returns (total_bytes, per_op)."""
+    per_op = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        for op in COLLECTIVE_OPS:
+            # match e.g. `%ag = bf16[...] all-gather(...)` incl. -start forms
+            if f" {op}(" in stripped or f" {op}-start(" in stripped:
+                if "=" not in stripped:
+                    continue
+                rhs = stripped.split("=", 1)[1]
+                # result type(s): shapes before the op token
+                head = rhs.split(op, 1)[0]
+                nbytes = 0
+                for dt, dims in _SHAPE_RE.findall(head):
+                    n = 1
+                    if dims:
+                        for d in dims.split(","):
+                            n *= int(d)
+                    nbytes += n * _DTYPE_BYTES[dt]
+                per_op[op] += nbytes
+                break
+    return sum(per_op.values()), per_op
+
+
+def model_flops(cfg, shape: S.InputShape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) useful-FLOPs yardstick."""
+    n_total = M.num_params(cfg)
+    n_active = n_total
+    if cfg.moe is not None:
+        m = cfg.moe
+        # routed expert params not in the top-k are inactive per token
+        expert_params = 3 * cfg.d_model * m.d_ff_expert
+        routed_layers = cfg.num_layers - m.first_dense_layers
+        n_active -= routed_layers * (m.num_experts - m.top_k) * expert_params
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                   (shape.seq_len if shape.kind == "prefill"
+                                    else 1))
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult) * n_active * tokens
+
+
+def build_lowering(arch: str, shape_name: str, mesh, *, opt_name: str = "muon",
+                   step_kind=None, seq_shard: bool = False, beta: float = 0.5,
+                   fed_clients: int = 8, fed_local_steps: int = 2,
+                   cfg=None, shape_override=None, unroll: bool = False,
+                   serve_fsdp: bool = False, gg_dtype=jnp.float32,
+                   state_dtype=None):
+    cfg = cfg or configs.get_config(arch)
+    shape = shape_override or S.INPUT_SHAPES[shape_name]
+    kind = step_kind or shape.kind
+
+    if kind in ("train", "fed_round"):
+        rules = TRAIN_RULES
+        lr = optim.DEFAULT_LR.get(opt_name, 1e-2)
+        opt_kw = {}
+        if opt_name == "soap":
+            opt_kw["state_dtype"] = state_dtype or jnp.bfloat16
+        elif opt_name == "muon" and state_dtype is not None:
+            opt_kw["state_dtype"] = state_dtype
+        opt = optim.make(opt_name, **opt_kw)
+        params = S.param_specs(cfg, mesh, rules)
+        batch = S.token_inputs(cfg, shape, mesh, rules=rules, with_labels=True)
+        gg = S.like_tree_specs(jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, gg_dtype), params), mesh)
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        if kind == "train":
+            opt_state = S.opt_state_specs(opt, params, mesh)
+            step_fn = ST.make_train_step(cfg, opt, lr=lr, beta=beta,
+                                         seq_shard=seq_shard, unroll=unroll,
+                                         batch_axes=batch_axes)
+            args = (params, opt_state, gg,
+                    batch, jax.ShapeDtypeStruct((), jnp.int32))
+        else:
+            theta = S.like_tree_specs(
+                jax.eval_shape(lambda p: opt.get_precond(opt.init(p)), params),
+                mesh)
+            step_fn = ST.make_fed_round_step(
+                cfg, opt, lr=lr, beta=beta, clients=fed_clients,
+                local_steps=fed_local_steps, seq_shard=seq_shard,
+                batch_axes=batch_axes)
+            args = (params, theta, gg, batch,
+                    jax.ShapeDtypeStruct((2,), jnp.uint32))
+    elif kind == "prefill":
+        rules = SERVE_FSDP_RULES if serve_fsdp else SERVE_RULES
+        params = S.param_specs(cfg, mesh, rules)
+        batch = S.token_inputs(cfg, shape, mesh, rules=rules, with_labels=False)
+        step_fn = ST.make_prefill_step(cfg, shape.seq_len, unroll=unroll)
+        args = (params, batch)
+    elif kind == "decode":
+        rules = SERVE_FSDP_RULES if serve_fsdp else SERVE_RULES
+        params = S.param_specs(cfg, mesh, rules)
+        ring = shape.name == "long_500k"
+        caches = S.cache_specs(cfg, shape, mesh, rules, ring=ring)
+        tok_shape = ((shape.global_batch, 1, cfg.num_codebooks)
+                     if cfg.num_codebooks > 1 else (shape.global_batch, 1))
+        tokens = S._sds(tok_shape, jnp.int32, mesh,
+                        S.resolve_spec(tok_shape, ("batch", "seq") +
+                                       (("codebook",) if cfg.num_codebooks > 1
+                                        else ()), mesh, rules))
+        step_fn = ST.make_decode_step(cfg, shape.seq_len - 1, unroll=unroll)
+        args = (params, tokens, caches)
+    else:
+        raise ValueError(kind)
+
+    in_shardings = jax.tree.map(
+        lambda x: x.sharding, args,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    with mesh:
+        jitted = jax.jit(step_fn, in_shardings=in_shardings)
+        lowered = jitted.lower(*args)
+    return cfg, shape, lowered
+
+
+def analyze(arch, shape_name, mesh_name, lowered, cfg, shape, *,
+            unrolled_lowered=None):
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    n_chips = {"pod": 256, "multipod": 512}[mesh_name]
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    rec["bytes_per_device"] = {
+        "argument": getattr(mem, "argument_size_in_bytes", None),
+        "output": getattr(mem, "output_size_in_bytes", None),
+        "temp": getattr(mem, "temp_size_in_bytes", None),
+        "peak": getattr(mem, "peak_memory_in_bytes", None),
+    }
+    # FLOP/byte totals come from the *unrolled* lowering when provided: XLA's
+    # cost analysis counts lax.scan (while-loop) bodies once, so the scanned
+    # compile-proof module undercounts by ~num_layers.
+    cost_src = unrolled_lowered if unrolled_lowered is not None else compiled
+    cost = cost_src.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    # Fusion-corrected memory estimate: unoptimized HLO double-counts every
+    # intermediate, so scale the *optimized* (compiled, scanned) module's
+    # bytes by the loop-trip factor implied by the flops ratio.
+    if unrolled_lowered is not None:
+        ccost = compiled.cost_analysis()
+        if isinstance(ccost, list):
+            ccost = ccost[0]
+        cflops = float(ccost.get("flops", 0.0)) or 1.0
+        cbytes_acc = float(ccost.get("bytes accessed", 0.0))
+        scale = flops / cflops
+        rec["hlo_bytes_opt_est"] = cbytes_acc * scale
+    else:
+        rec["hlo_bytes_opt_est"] = None
+    rec["hlo_flops"] = flops
+    rec["hlo_bytes"] = bytes_accessed
+    cbytes, per_op = collective_bytes_from_hlo(compiled.as_text())
+    rec["collective_bytes"] = cbytes
+    rec["collective_per_op"] = per_op
+    # Roofline terms (seconds), per the spec formulas:
+    #   compute    = HLO_FLOPs / (chips * peak)
+    #   memory     = HLO_bytes / (chips * HBM_bw)
+    #   collective = collective_bytes / (chips * link_bw)
+    # (cost_analysis on the CPU backend reports whole-program totals; the
+    # chips divisor distributes them, matching MODEL_FLOPS totals we verify
+    # against via useful_flop_ratio.)
+    rec["t_compute"] = flops / (n_chips * PEAK_FLOPS_BF16)
+    rec["t_memory"] = bytes_accessed / (n_chips * HBM_BW)
+    rec["t_collective"] = cbytes / (n_chips * ICI_BW)
+    if rec.get("hlo_bytes_opt_est"):
+        rec["t_memory_opt"] = rec["hlo_bytes_opt_est"] / (n_chips * HBM_BW)
+    dom = max(("compute", "memory", "collective"),
+              key=lambda k: rec[f"t_{k}"])
+    rec["dominant"] = dom
+    mf = model_flops(cfg, shape)
+    rec["model_flops_total"] = mf
+    rec["model_flops_per_chip"] = mf / n_chips
+    rec["useful_flop_ratio"] = mf / flops if flops else None
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--step", default=None,
+                    choices=[None, "train", "fed_round", "prefill", "decode"])
+    ap.add_argument("--opt", default="muon")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--serve-fsdp", action="store_true")
+    ap.add_argument("--gg-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--state-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = configs.ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(S.INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        cfg = configs.get_config(a)
+        for sh in shapes:
+            if sh == "long_500k" and not cfg.supports_long_decode:
+                print(f"SKIP {a} x long_500k (full attention; see DESIGN.md)")
+                continue
+            pairs.append((a, sh))
+
+    out_f = open(args.out, "a") if args.out else None
+    failures = 0
+    for a, sh in pairs:
+        for mesh_name in meshes:
+            mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+            tag = f"{a} x {sh} x {mesh_name}"
+            try:
+                t0 = time.time()
+                kw = dict(opt_name=args.opt, step_kind=args.step,
+                          seq_shard=args.seq_shard,
+                          serve_fsdp=args.serve_fsdp,
+                          gg_dtype=getattr(jnp, args.gg_dtype),
+                          state_dtype=(getattr(jnp, args.state_dtype)
+                                       if args.state_dtype else None))
+                cfg, shape, lowered = build_lowering(a, sh, mesh, **kw)
+                lower_s = time.time() - t0
+                if args.lower_only:
+                    print(f"LOWER-OK {tag} ({lower_s:.0f}s)")
+                    continue
+                # unrolled lowering (never compiled): true FLOP/byte totals
+                _, _, unrolled = build_lowering(a, sh, mesh, unroll=True,
+                                                **kw)
+                rec = analyze(a, sh, mesh_name, lowered, cfg, shape,
+                              unrolled_lowered=unrolled)
+                rec["opt"] = args.opt
+                rec["step"] = args.step or shape.kind
+                rec["seq_shard"] = args.seq_shard
+                rec["serve_fsdp"] = args.serve_fsdp
+                rec["gg_dtype"] = args.gg_dtype
+                rec["state_dtype"] = args.state_dtype
+                rec["lower_s"] = round(lower_s, 1)
+                print(f"OK {tag}: dominant={rec['dominant']} "
+                      f"t_comp={rec['t_compute']:.3e}s "
+                      f"t_mem={rec['t_memory']:.3e}s "
+                      f"t_coll={rec['t_collective']:.3e}s "
+                      f"peak={rec['bytes_per_device']['peak']}")
+                if out_f:
+                    out_f.write(json.dumps(rec) + "\n")
+                    out_f.flush()
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures += 1
+                print(f"FAIL {tag}: {type(e).__name__}: {str(e)[:300]}")
+    if out_f:
+        out_f.close()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,119 @@
+"""Input/state ShapeDtypeStruct stand-ins + shardings for the dry-run.
+
+Nothing here allocates device memory: params/optimizer states come from
+``jax.eval_shape`` over the init functions, inputs are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.transformer import cache_axes
+from repro.sharding.partitioning import (
+    TRAIN_RULES, SERVE_RULES, resolve_spec, greedy_spec,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def batch_spec(mesh, batch: int) -> P:
+    return resolve_spec((batch,), ("batch",), mesh, TRAIN_RULES)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def token_inputs(cfg: ModelConfig, shape: InputShape, mesh, *, rules,
+                 with_labels: bool):
+    """ShapeDtypeStructs for one step's data batch."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    bspec = resolve_spec((b, s), ("batch", "seq"), mesh, rules)
+    tok_shape = (b, s, cfg.num_codebooks) if cfg.num_codebooks > 1 else (b, s)
+    tok_spec = resolve_spec(tok_shape, ("batch", "seq") + (("codebook",)
+                            if cfg.num_codebooks > 1 else ()), mesh, rules)
+    batch = {"tokens": _sds(tok_shape, jnp.int32, mesh, tok_spec)}
+    if cfg.accepts_embeds and shape.kind != "decode":
+        # frontend stub: precomputed patch/frame embeddings
+        espec = resolve_spec((b, s, cfg.d_model), ("batch", "seq", None),
+                             mesh, rules)
+        batch["embeds"] = _sds((b, s, cfg.d_model), cfg.jnp_dtype, mesh, espec)
+        batch["tokens"] = None
+    if with_labels:
+        batch["labels"] = _sds(tok_shape, jnp.int32, mesh, tok_spec)
+    return batch
+
+
+def param_specs(cfg: ModelConfig, mesh, rules):
+    shapes = M.param_shapes(cfg)
+    axes = M.param_axes(cfg)
+
+    def one(sds, ax):
+        spec = resolve_spec(sds.shape, ax, mesh, rules)
+        return _sds(sds.shape, sds.dtype, mesh, spec)
+
+    return jax.tree.map(
+        one, shapes, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def opt_state_specs(opt, params_sds, mesh):
+    """eval_shape the optimizer init and greedy-shard every leaf."""
+    state = jax.eval_shape(opt.init, params_sds)
+
+    def one(sds):
+        spec = greedy_spec(sds.shape, mesh)
+        return _sds(sds.shape, sds.dtype, mesh, spec)
+
+    return jax.tree.map(one, state)
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh, rules,
+                ring: bool):
+    caches = jax.eval_shape(
+        lambda: M.init_caches(cfg, shape.global_batch, shape.seq_len,
+                              ring=ring))
+    axes = cache_axes(cfg)
+
+    def one(sds, ax):
+        spec = resolve_spec(sds.shape, ax, mesh, rules)
+        return _sds(sds.shape, sds.dtype, mesh, spec)
+
+    return jax.tree.map(
+        one, caches, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def like_tree_specs(tree_sds, mesh):
+    """Greedy shardings for an arbitrary SDS pytree (g_global etc.)."""
+    def one(sds):
+        return _sds(sds.shape, sds.dtype, mesh, greedy_spec(sds.shape, mesh))
+    return jax.tree.map(one, tree_sds)
+
+
+def shardings_of(tree):
+    return jax.tree.map(
+        lambda x: x.sharding, tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,114 @@
+"""Step functions lowered by the dry-run and launched by train.py/serve.py.
+
+train_step  — one FedPAC local step: grad -> UpdateState -> P_Theta(g) ->
+              correction mix with g_G (Eq. 9).  This is what each client
+              executes K times per round; lowering it exercises the paper's
+              technique (preconditioner compute + optimizer sharding).
+fed_round   — a full Alg. 2 round: C client groups x K local steps
+              (vmap x scan) + parameter/Theta aggregation collectives.
+prefill/decode — serving paths with sharded KV caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim.api import LocalOptimizer
+from repro.core.client import LocalRunConfig, client_round
+
+
+def make_loss_fn(cfg: ModelConfig, *, remat: bool = True,
+                 seq_shard: bool = False, unroll: bool = False,
+                 batch_axes=("data",)):
+    constraint = None
+    if seq_shard:
+        def constraint(x):
+            # Megatron-style sequence sharding of the remat-stored layer
+            # input: (B, S, D) -> batch over data(+pod), seq over model.
+            return jax.lax.with_sharding_constraint(
+                x, P(tuple(batch_axes), "model", None))
+    def loss_fn(params, batch):
+        return M.loss_fn(params, batch, cfg, remat=remat,
+                         layer_constraint=constraint, unroll=unroll)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
+                    beta: float = 0.5, remat: bool = True,
+                    seq_shard: bool = False, unroll: bool = False,
+                    batch_axes=("data",)):
+    loss_fn = make_loss_fn(cfg, remat=remat, seq_shard=seq_shard,
+                           unroll=unroll, batch_axes=batch_axes)
+
+    def train_step(params, opt_state, g_global, batch, step):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        extras = None
+        if opt.needs_hessian:  # Sophia: Hutchinson diag-Hessian estimate
+            from repro.core.client import hutchinson_estimate
+            est = hutchinson_estimate(
+                loss_fn, params, batch,
+                jax.random.fold_in(jax.random.key(0), step))
+            extras = {"h_est": est, "h_gate": (step % 10) == 0}
+        direction, opt_state = opt.update(grads, opt_state, params, step,
+                                          extras)
+
+        def mix(d, gg, p):
+            upd = (1.0 - beta) * d + beta * gg
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        params = jax.tree.map(mix, direction, g_global, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_fed_round_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
+                        beta: float = 0.5, clients: int = 8,
+                        local_steps: int = 2, remat: bool = True,
+                        seq_shard: bool = False, batch_axes=("data",)):
+    """Full FedPAC round: the global batch splits into ``clients`` cohorts of
+    ``local_steps`` microbatches each; Theta/params aggregation lowers to
+    all-reduces over the client (data) axis."""
+    loss_fn = make_loss_fn(cfg, remat=remat, seq_shard=seq_shard,
+                           batch_axes=batch_axes)
+    run = LocalRunConfig(lr=lr, local_steps=local_steps, beta=beta, align=True)
+
+    def fed_round(params, theta, g_global, batch, rng):
+        def split(x):  # (B, ...) -> (C, K, B/(C*K), ...)
+            b = x.shape[0]
+            micro = b // (clients * local_steps)
+            return x.reshape(clients, local_steps, micro, *x.shape[1:])
+
+        batches = jax.tree.map(split, batch)
+        keys = jax.random.split(rng, clients)
+        deltas, thetas, losses = jax.vmap(
+            lambda bi, ki: client_round(loss_fn, opt, run, params, theta,
+                                        g_global, bi, ki))(batches, keys)
+        mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        new_params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+            params, mean_delta)
+        new_theta = jax.tree.map(lambda t: jnp.mean(t, axis=0), thetas)
+        new_g = jax.tree.map(lambda d: -d / (local_steps * lr), mean_delta)
+        return new_params, new_theta, new_g, jnp.mean(losses)
+
+    return fed_round
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, unroll: bool = False):
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg, max_len, unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, index: int, unroll: bool = False):
+    def decode_step(params, tokens, caches):
+        return M.decode_step(params, tokens, caches, jnp.int32(index), cfg,
+                             unroll=unroll)
+    return decode_step

@@ -1,0 +1,7 @@
+from repro.models.config import (
+    ModelConfig, MoEConfig, MLAConfig, SSMConfig, RGLRUConfig, reduced,
+)
+from repro.models.model import (
+    init_params, init_boxed, param_axes, param_shapes, num_params,
+    forward, loss_fn, prefill, decode_step, init_caches,
+)

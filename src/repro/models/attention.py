@@ -1,0 +1,266 @@
+"""Attention: GQA (+bias), sliding-window / local attention, MLA, KV caches.
+
+Long sequences use a pure-JAX flash-style chunked attention (online softmax
+over KV chunks) so 32k-token prefill lowers without materializing S x S
+score matrices.  On TPU this is the natural blocking for a Pallas port; here
+it is the memory-correct reference the dry-run compiles.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import Initializer
+from repro.models.layers import init_norm, apply_norm
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# ================================================================ init
+
+def init_attention(ini: Initializer, cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": ini.dense((d, nq * hd), ("embed", "qkv")),
+        "wk": ini.dense((d, nkv * hd), ("embed", "qkv")),
+        "wv": ini.dense((d, nkv * hd), ("embed", "qkv")),
+        "wo": ini.dense((nq * hd, d), ("qkv", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ini.zeros((nq * hd,), ("qkv",))
+        p["bk"] = ini.zeros((nkv * hd,), ("qkv",))
+        p["bv"] = ini.zeros((nkv * hd,), ("qkv",))
+    return p
+
+
+def init_mla(ini: Initializer, cfg: ModelConfig):
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": ini.dense((d, m.q_lora_rank), ("embed", "kv_lora")),
+        "q_norm": init_norm(ini, m.q_lora_rank, cfg.norm_type),
+        "wq_b": ini.dense((m.q_lora_rank, h * qk), ("kv_lora", "qkv")),
+        "wkv_a": ini.dense((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           ("embed", "kv_lora")),
+        "kv_norm": init_norm(ini, m.kv_lora_rank, cfg.norm_type),
+        "wkv_b": ini.dense((m.kv_lora_rank,
+                            h * (m.qk_nope_head_dim + m.v_head_dim)),
+                           ("kv_lora", "qkv")),
+        "wo": ini.dense((h * m.v_head_dim, d), ("qkv", "embed")),
+    }
+
+
+# ================================================================ masks
+
+def _causal_window_mask(q_pos, k_pos, window: int):
+    """q_pos: (..., Sq), k_pos: (..., Sk) -> bool mask (..., Sq, Sk)."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    m = dk <= dq
+    if window:
+        m &= dk > dq - window
+    return m
+
+
+# ================================================================ core attention
+
+def _sdpa(q, k, v, q_pos, k_pos, window: int, k_valid=None):
+    """Plain attention. q: (B,Sq,H,D) k/v: (B,Sk,Hkv,D).
+
+    GQA contracts grouped query heads against the raw KV heads (no
+    ``jnp.repeat``): the KV cache is read once instead of rep x — the §Perf
+    decode-memory lever.
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, sq, hkv, rep, dh)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32)
+    scores *= dh ** -0.5
+    mask = _causal_window_mask(q_pos, k_pos, window)[:, None, None]
+    if k_valid is not None:
+        mask = mask & k_valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w, v)
+    return out.reshape(b, sq, h, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def _chunked_sdpa(q, k, v, q_pos, k_pos, window: int, chunk: int):
+    """Flash-style online-softmax over KV chunks; O(Sq * chunk) transients."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    nchunks = k.shape[1] // chunk
+    kc = k.reshape(b, nchunks, chunk, hkv, k.shape[-1])
+    vc = v.reshape(b, nchunks, chunk, hkv, v.shape[-1])
+    pc = k_pos.reshape(b, nchunks, chunk)
+    scale = dh ** -0.5
+
+    qg = q.reshape(b, sq, hkv, rep, dh)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry  # (B,Hkv,R,Sq[,D])
+        kb, vb, pb = xs  # (B,C,Hkv,D), (B,C)
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, kb).astype(jnp.float32) * scale
+        mask = _causal_window_mask(q_pos, pb, window)[:, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhrqk,bkhd->bhrqd", p.astype(q.dtype), vb)
+        acc = acc * alpha[..., None].astype(q.dtype) + pv
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, hkv, rep, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, rep, sq, v.shape[-1]), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), pc.swapaxes(0, 1)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, v.shape[-1])
+
+
+def sdpa(q, k, v, q_pos, k_pos, cfg: ModelConfig, window: int, k_valid=None):
+    sq, sk = q.shape[1], k.shape[1]
+    if sq >= cfg.attn_chunk_threshold and k_valid is None:
+        return _chunked_sdpa(q, k, v, q_pos, k_pos, window, cfg.attn_chunk)
+    return _sdpa(q, k, v, q_pos, k_pos, window, k_valid)
+
+
+# ================================================================ GQA layer
+
+def attention_forward(p, x, positions, cfg: ModelConfig, *, window: int,
+                      cache=None, cache_index=None):
+    """x: (B,S,D). cache: dict with k/v ring or linear buffers (decode).
+
+    Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, nq, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+
+    rope_pos = positions
+    q = apply_rope(q, rope_pos, theta=cfg.rope_theta, fraction=cfg.rope_fraction,
+                   mrope_sections=cfg.mrope_sections)
+    k = apply_rope(k, rope_pos, theta=cfg.rope_theta, fraction=cfg.rope_fraction,
+                   mrope_sections=cfg.mrope_sections)
+
+    q_pos1d = positions[..., 0] if positions.ndim == 3 else positions
+
+    if cache is None:
+        out = sdpa(q, k, v, q_pos1d, q_pos1d, cfg, window)
+        new_cache = None
+    else:
+        # decode / cached prefill: insert the new k/v then attend to buffer.
+        ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+        buf_len = ck.shape[1]
+        # Identity when the buffer covers the full context; ring-wrap when the
+        # buffer is window-bounded (long-context decode).
+        slot = cache_index % buf_len
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, jnp.broadcast_to(q_pos1d.astype(cpos.dtype), (b, s)), (0, slot))
+        k_valid = (cpos <= q_pos1d[:, -1:]) & (cpos >= 0)  # filled entries
+        out = sdpa(q, ck, cv, q_pos1d, cpos, cfg, window, k_valid=k_valid)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    out = out.reshape(b, s, nq * hd)
+    return out @ p["wo"], new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
+                    dtype, ring: bool = False):
+    hd = cfg.resolved_head_dim
+    buf = min(max_len, window) if (window and ring) else max_len
+    return {
+        "k": jnp.zeros((batch, buf, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, buf, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, buf), -1, jnp.int32),
+    }
+
+
+# ================================================================ MLA layer
+
+def mla_forward(p, x, positions, cfg: ModelConfig, *, cache=None,
+                cache_index=None):
+    """DeepSeek-V2 Multi-head Latent Attention.
+
+    Decode cache stores only (c_kv, k_rope): (B, S, kv_lora + rope_dim).
+    """
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q = apply_norm(p["q_norm"], x @ p["wq_a"], cfg.norm_type) @ p["wq_b"]
+    q = q.reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+
+    kv_a = x @ p["wkv_a"]  # (B,S,kv_lora+rope)
+    c_kv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_kv = apply_norm(p["kv_norm"], c_kv, cfg.norm_type)
+
+    pos1d = positions[..., 0] if positions.ndim == 3 else positions
+    q_rope = apply_rope(q_rope, pos1d, theta=cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos1d, theta=cfg.rope_theta)
+
+    if cache is not None:
+        cc, cr, cpos = cache["c_kv"], cache["k_rope"], cache["pos"]
+        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, cache_index, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cr, k_rope[:, :, 0, :].astype(cr.dtype), (0, cache_index, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, jnp.broadcast_to(pos1d.astype(cpos.dtype), (b, s)), (0, cache_index))
+        k_valid = (cpos <= pos1d[:, -1:]) & (cpos >= 0)
+        c_kv_all, k_rope_all, kpos = cc, cr, cpos
+        new_cache = {"c_kv": cc, "k_rope": cr, "pos": cpos}
+    else:
+        c_kv_all, k_rope_all, kpos = c_kv, k_rope[:, :, 0, :], pos1d
+        k_valid = None
+        new_cache = None
+
+    # Expand latent to per-head K (nope part) and V.
+    kv = c_kv_all @ p["wkv_b"]  # (B,T,h*(nope+v))
+    t = kv.shape[1]
+    kv = kv.reshape(b, t, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_all[:, :, None, :],
+                                  (b, t, h, m.qk_rope_head_dim))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = sdpa(q_full, k, v, pos1d, kpos, cfg, window=0, k_valid=k_valid)
+    out = out.reshape(b, s, h * m.v_head_dim)
+    return out @ p["wo"], new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }

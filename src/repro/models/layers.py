@@ -1,0 +1,102 @@
+"""Core layers: norms, MLPs, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import Initializer
+
+
+# ---------------------------------------------------------------- norms
+
+def init_norm(ini: Initializer, d: int, kind: str):
+    if kind == "rms":
+        return {"scale": ini.ones((d,), ("embed",))}
+    return {"scale": ini.ones((d,), ("embed",)), "bias": ini.zeros((d,), ("embed",))}
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+
+def init_mlp(ini: Initializer, d: int, d_ff: int, mlp_type: str):
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": ini.dense((d, d_ff), ("embed", "ffn")),
+            "w_up": ini.dense((d, d_ff), ("embed", "ffn")),
+            "w_down": ini.dense((d_ff, d), ("ffn", "embed")),
+        }
+    if mlp_type == "gelu":
+        return {
+            "w_up": ini.dense((d, d_ff), ("embed", "ffn")),
+            "b_up": ini.zeros((d_ff,), ("ffn",)),
+            "w_down": ini.dense((d_ff, d), ("ffn", "embed")),
+            "b_down": ini.zeros((d,), ("embed",)),
+        }
+    raise ValueError(mlp_type)
+
+
+def apply_mlp(p, x, mlp_type: str):
+    if mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_type == "swiglu" else jax.nn.gelu
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ---------------------------------------------------------------- embeddings / head
+
+def init_embedding(ini: Initializer, cfg: ModelConfig):
+    p = {}
+    if cfg.num_codebooks > 1:
+        p["tok"] = ini.embedding(
+            (cfg.num_codebooks, cfg.vocab_size, cfg.d_model),
+            ("codebook", "vocab", "embed"), scale=0.02)
+    else:
+        p["tok"] = ini.embedding((cfg.vocab_size, cfg.d_model),
+                                 ("vocab", "embed"), scale=0.02)
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            p["head"] = ini.dense(
+                (cfg.num_codebooks, cfg.d_model, cfg.vocab_size),
+                ("codebook", "embed", "vocab"))
+        else:
+            p["head"] = ini.dense((cfg.d_model, cfg.vocab_size),
+                                  ("embed", "vocab"))
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    """tokens: (B, S) int or (B, S, C) for multi-codebook models."""
+    if cfg.num_codebooks > 1:
+        # Sum codebook embeddings (MusicGen-style; the delay pattern is a data
+        # pipeline concern, the backbone consumes summed embeddings).
+        # tokens (B,S,C): gather per codebook.
+        parts = [jnp.take(p["tok"][c], tokens[..., c], axis=0)
+                 for c in range(cfg.num_codebooks)]
+        return sum(parts)
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(p, x, cfg: ModelConfig):
+    if cfg.num_codebooks > 1:
+        if cfg.tie_embeddings:
+            # (B,S,D) x (C,V,D) -> (B,S,C,V)
+            return jnp.einsum("bsd,cvd->bscv", x, p["tok"])
+        return jnp.einsum("bsd,cdv->bscv", x, p["head"])
+    if cfg.tie_embeddings:
+        return x @ p["tok"].T
+    return x @ p["head"]

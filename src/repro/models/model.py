@@ -1,0 +1,144 @@
+"""Public model API: init / loss / prefill / decode / input_specs.
+
+Batch convention (all entries optional except labels for training):
+  tokens : (B, S) int32, or (B, S, C) for multi-codebook (MusicGen)
+  embeds : (B, S, D) precomputed frontend embeddings (VLM / audio stubs)
+  labels : same shape as tokens
+  positions : (B, S) or (B, S, 3) for M-RoPE
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import Initializer, unbox, axes_of
+from repro.models.layers import init_embedding, embed_tokens, lm_logits, init_norm
+from repro.models.transformer import (
+    init_blocks, backbone_forward, init_group_caches,
+)
+
+
+# ---------------------------------------------------------------- init
+
+def init_boxed(cfg: ModelConfig, key):
+    ini = Initializer(key, dtype=cfg.jnp_dtype)
+    params = {
+        "embed": init_embedding(ini, cfg),
+        "blocks": init_blocks(ini, cfg),
+        "final_norm": init_norm(ini, cfg.d_model, cfg.norm_type),
+    }
+    return params
+
+
+def init_params(cfg: ModelConfig, key):
+    return unbox(init_boxed(cfg, key))
+
+
+def param_axes(cfg: ModelConfig):
+    boxed = jax.eval_shape(lambda k: init_boxed(cfg, k),
+                           jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return axes_of(boxed)
+
+
+def param_shapes(cfg: ModelConfig):
+    boxed = jax.eval_shape(lambda k: init_boxed(cfg, k),
+                           jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return unbox(boxed)
+
+
+def num_params(cfg: ModelConfig) -> int:
+    import math
+    shapes = param_shapes(cfg)
+    return sum(math.prod(s.shape) if s.shape else 1
+               for s in jax.tree.leaves(shapes))
+
+
+# ---------------------------------------------------------------- forward
+
+def _positions_for(cfg: ModelConfig, batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos
+
+
+def forward(params, batch, cfg: ModelConfig, *, caches=None, cache_index=None,
+            remat: bool = False, layer_constraint=None, unroll: bool = False):
+    """Returns (logits, new_caches, aux_loss)."""
+    if batch.get("embeds") is not None:
+        x = batch["embeds"].astype(cfg.jnp_dtype)
+        b, s = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape[:2]
+        x = embed_tokens(params["embed"], tokens, cfg)
+    positions = batch.get("positions")
+    if positions is None:
+        offset = cache_index if cache_index is not None else 0
+        positions = _positions_for(cfg, b, s, offset=offset)
+    h, new_caches, aux = backbone_forward(
+        params, x, positions, cfg, caches=caches, cache_index=cache_index,
+        remat=remat, layer_constraint=layer_constraint, unroll=unroll)
+    logits = lm_logits(params["embed"], h, cfg)
+    return logits, new_caches, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat: bool = False,
+            layer_constraint=None, unroll: bool = False):
+    """Mean next-token cross-entropy (+ MoE aux). Labels are pre-shifted."""
+    logits, _, aux = forward(params, batch, cfg, remat=remat,
+                             layer_constraint=layer_constraint, unroll=unroll)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll) / denom
+    else:
+        ce = jnp.mean(nll)
+    return ce + aux
+
+
+# ---------------------------------------------------------------- serving
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                ring: bool = False):
+    """ring=True bounds windowed-attention caches to the window (long decode).
+
+    Caches are stacked per scan group (leading 'layers' axis)."""
+    dtype = cfg.jnp_dtype
+    return init_group_caches(cfg, batch, max_len, dtype, ring=ring)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int,
+            unroll: bool = False):
+    """Run the prompt through the model, filling caches.
+
+    Returns (last_token_logits, caches).  For attention layers the caches are
+    filled by inserting at index 0 with the full prompt.
+    """
+    tokens = batch.get("tokens")
+    if batch.get("embeds") is not None:
+        b, s = batch["embeds"].shape[:2]
+    else:
+        b, s = tokens.shape[:2]
+    caches = init_caches(cfg, b, max_len)
+    logits, caches, _ = forward(params, batch, cfg, caches=caches,
+                                cache_index=0, unroll=unroll)
+    return logits[:, -1], caches
+
+
+def decode_step(params, tokens, caches, index, cfg: ModelConfig,
+                unroll: bool = False):
+    """One decode step. tokens: (B, 1[, C]); index: int32 scalar position."""
+    batch = {"tokens": tokens}
+    logits, caches, _ = forward(params, batch, cfg, caches=caches,
+                                cache_index=index, unroll=unroll)
+    return logits[:, -1], caches

@@ -1,0 +1,74 @@
+"""Mixture-of-Experts: top-k router + dropless ragged-dot expert compute.
+
+Dispatch is sort-based (tokens grouped by expert, ``jax.lax.ragged_dot``)
+rather than capacity-einsum: compiled FLOPs stay proportional to *active*
+parameters (6 * N_active * D for the roofline's MODEL_FLOPS check) and no
+(T, E, C) dispatch tensors are materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import Initializer
+from repro.models.layers import init_mlp, apply_mlp
+
+
+def init_moe(ini: Initializer, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert
+    p = {
+        "router": ini.dense((d, m.num_experts), ("embed", "expert"), scale=0.02),
+        "w_gate": ini.dense((m.num_experts, d, f), ("expert", "embed", "ffn")),
+        "w_up": ini.dense((m.num_experts, d, f), ("expert", "embed", "ffn")),
+        "w_down": ini.dense((m.num_experts, f, d), ("expert", "ffn", "embed")),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ini, d, f * m.num_shared_experts, "swiglu")
+    return p
+
+
+def _ragged_expert_mlp(x_sorted, p, group_sizes):
+    """x_sorted: (T*k, d) grouped by expert; SwiGLU expert MLP."""
+    g = jax.lax.ragged_dot(x_sorted, p["w_gate"], group_sizes)
+    u = jax.lax.ragged_dot(x_sorted, p["w_up"], group_sizes)
+    h = jax.nn.silu(g) * u
+    return jax.lax.ragged_dot(h, p["w_down"], group_sizes)
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """x: (B,S,D) -> (B,S,D), aux_loss (router load-balance)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, m.top_k)  # (T,k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # Load-balance aux loss (Switch-style).
+    density = jnp.mean(
+        jax.nn.one_hot(topi[:, 0], m.num_experts, dtype=jnp.float32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * m.num_experts * m.router_aux_coef
+
+    # Sort token-expert assignments by expert id.
+    flat_expert = topi.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_expert)
+    token_of = order // m.top_k
+    x_sorted = jnp.take(xf, token_of, axis=0)  # (T*k, d)
+    group_sizes = jnp.bincount(flat_expert, length=m.num_experts)
+
+    y_sorted = _ragged_expert_mlp(x_sorted, p, group_sizes)  # (T*k, d)
+
+    w_sorted = jnp.take(topw.reshape(-1), order)
+    y_sorted = y_sorted * w_sorted[:, None].astype(y_sorted.dtype)
+    y = jnp.zeros((t, d), y_sorted.dtype).at[token_of].add(y_sorted)
+
+    if m.num_shared_experts:
+        y = y + apply_mlp(p["shared"], xf, "swiglu")
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,82 @@
+"""Parameter boxing: arrays tagged with logical sharding axes.
+
+Model ``init`` functions build pytrees whose leaves are ``Box(value, axes)``.
+``unbox``/``axes_of`` split that into a plain params pytree and a matching
+pytree of logical-axis tuples consumed by ``repro.sharding``.
+
+Box is registered as a pytree node so ``jax.eval_shape`` over an init function
+yields boxed ShapeDtypeStructs — the dry-run path never materializes weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+
+@jtu.register_pytree_node_class
+class Box:
+    """An array leaf annotated with per-dimension logical axis names."""
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    def __repr__(self):
+        return f"Box({getattr(self.value, 'shape', self.value)}, axes={self.axes})"
+
+
+def _is_box(x):
+    return isinstance(x, Box)
+
+
+def unbox(tree):
+    return jax.tree.map(lambda b: b.value, tree, is_leaf=_is_box)
+
+
+def axes_of(tree):
+    return jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_box)
+
+
+def boxed_zeros(shape, axes, dtype=jnp.float32):
+    return Box(jnp.zeros(shape, dtype), axes)
+
+
+class Initializer:
+    """Splits a PRNG key on demand; produces boxed parameters."""
+
+    def __init__(self, key, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def dense(self, shape, axes, scale=None):
+        fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+        if len(shape) == 3:  # (expert, d_in, d_out)
+            fan_in = shape[1]
+        std = scale if scale is not None else fan_in ** -0.5
+        v = (jax.random.normal(self._next(), shape, jnp.float32) * std).astype(self.dtype)
+        return Box(v, axes)
+
+    def embedding(self, shape, axes, scale=1.0):
+        v = (jax.random.normal(self._next(), shape, jnp.float32) * scale).astype(self.dtype)
+        return Box(v, axes)
+
+    def zeros(self, shape, axes):
+        return Box(jnp.zeros(shape, self.dtype), axes)
+
+    def ones(self, shape, axes):
+        return Box(jnp.ones(shape, self.dtype), axes)
+
+    def constant(self, value, axes):
+        return Box(jnp.asarray(value, self.dtype), axes)

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin family).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)); gates r, i are linear in x.
+Elementwise over the lru width -> a single associative scan suffices (no state
+dimension), so no chunking is needed at 4k sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import Initializer
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru(ini: Initializer, cfg: ModelConfig):
+    r = cfg.rglru
+    d = cfg.d_model
+    w = _width(cfg)
+    return {
+        "in_proj": ini.dense((d, 2 * w), ("embed", "ffn")),   # x branch + gate branch
+        "conv_w": ini.dense((r.d_conv, w), ("conv", "ffn"), scale=0.5),
+        "conv_b": ini.zeros((w,), ("ffn",)),
+        "w_r": ini.dense((w, w), ("ffn", "ffn")),
+        "b_r": ini.zeros((w,), ("ffn",)),
+        "w_i": ini.dense((w, w), ("ffn", "ffn")),
+        "b_i": ini.zeros((w,), ("ffn",)),
+        # Lambda parameterized so a ~ U(0.9, 0.999) at init.
+        "lam": ini.constant(jnp.linspace(-4.0, -9.0, w), ("ffn",)),
+        "out_proj": ini.dense((w, d), ("ffn", "embed")),
+    }
+
+
+def _gates(p, xb, cfg: ModelConfig):
+    r = jax.nn.sigmoid(xb @ p["w_r"] + p["b_r"])
+    i = jax.nn.sigmoid(xb @ p["w_i"] + p["b_i"])
+    log_a = -cfg.rglru.c * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i.astype(jnp.float32) * xb.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_forward(p, x, cfg: ModelConfig, *, cache=None):
+    """x: (B,S,D). cache: {"conv": (B,d_conv-1,w), "h": (B,w)}."""
+    rcfg = cfg.rglru
+    b, s, _ = x.shape
+    w = _width(cfg)
+    xz = x @ p["in_proj"]
+    xb, z = jnp.split(xz, 2, axis=-1)
+
+    if cache is None or s > 1:
+        # Full-sequence path (training, or prefill when cache is supplied).
+        conv = jnp.zeros_like(xb)
+        for i in range(rcfg.d_conv):
+            shift = rcfg.d_conv - 1 - i
+            shifted = jnp.pad(xb, ((0, 0), (shift, 0), (0, 0)))[:, :s]
+            conv = conv + shifted * p["conv_w"][i]
+        conv = conv + p["conv_b"]
+        a, gated = _gates(p, conv, cfg)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        if cache is not None:
+            tail = jnp.concatenate([cache["conv"], xb], axis=1)
+            new_cache = {"conv": tail[:, -(rcfg.d_conv - 1):],
+                         "h": h[:, -1]}
+        else:
+            new_cache = None
+        y = h.astype(x.dtype)
+    else:
+        conv_state, h_prev = cache["conv"], cache["h"]
+        window = jnp.concatenate([conv_state, xb], axis=1)
+        conv = (jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])[:, None]
+        a, gated = _gates(p, conv, cfg)
+        h = a[:, 0] * h_prev + gated[:, 0]
+        y = h.astype(x.dtype)[:, None]
+        new_cache = {"conv": window[:, 1:], "h": h}
+
+    y = y * jax.nn.gelu(z)
+    return y @ p["out_proj"], new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    w = _width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru.d_conv - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

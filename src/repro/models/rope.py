@@ -1,0 +1,69 @@
+"""Rotary position embeddings: full, partial (ChatGLM3 "2d"), and M-RoPE (Qwen2-VL)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+
+def _rotate(x, cos, sin):
+    """x: (..., D) with D even; cos/sin: (..., D//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _angles(positions, rot_dim, theta):
+    """positions: (...,) -> (..., rot_dim//2) angles."""
+    inv_freq = theta ** (-jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def apply_rope(
+    x,
+    positions,
+    *,
+    theta: float = 10000.0,
+    fraction: float = 1.0,
+    mrope_sections: Optional[Sequence[int]] = None,
+):
+    """Apply rotary embedding.
+
+    x: (B, S, H, D).
+    positions: (B, S) int32, or (B, S, 3) for M-RoPE (temporal, height, width).
+    fraction: apply rope to the first ``fraction*D`` dims (ChatGLM3 uses 0.5).
+    mrope_sections: per-axis frequency-block sizes summing to rot_dim//2.
+    """
+    d = x.shape[-1]
+    rot_dim = int(d * fraction)
+    rot_dim -= rot_dim % 2
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+
+    if mrope_sections is not None:
+        assert positions.ndim == 3 and positions.shape[-1] == len(mrope_sections)
+        ang_parts = []
+        half = rot_dim // 2
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        full = _angles(positions[..., 0], rot_dim, theta)  # (B,S,half) template
+        offset = 0
+        for i, sec in enumerate(mrope_sections):
+            ang_i = _angles(positions[..., i], rot_dim, theta)[..., offset:offset + sec]
+            ang_parts.append(ang_i)
+            offset += sec
+        ang = jnp.concatenate(ang_parts, axis=-1)
+        del full
+    else:
+        if positions.ndim == 3:  # text-only path of an M-RoPE model
+            positions = positions[..., 0]
+        ang = _angles(positions, rot_dim, theta)  # (B, S, half)
+
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)  # (B,S,1,half)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([_rotate(x_rot, cos, sin), x_pass], axis=-1)
+
+
+def default_positions(batch: int, seq: int, *, mrope: bool = False, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if mrope:
+        pos = jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos

@@ -1,0 +1,152 @@
+"""Mamba-1 selective SSM (falcon-mamba-7b family).
+
+Training/prefill uses a chunked scan: outer ``lax.scan`` over time chunks with
+an inner associative scan, bounding the (chunk, d_inner, d_state) transient to
+VMEM-friendly sizes instead of materializing (S, d_inner, d_state).
+Decode is an O(1) state update.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import Initializer
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_inner, dt_rank
+
+
+def init_mamba(ini: Initializer, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, dt_rank = _dims(cfg)
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (d_inner, s.d_state)))
+    return {
+        "in_proj": ini.dense((d, 2 * d_inner), ("embed", "ffn")),
+        "conv_w": ini.dense((s.d_conv, d_inner), ("conv", "ffn"), scale=0.5),
+        "conv_b": ini.zeros((d_inner,), ("ffn",)),
+        "x_proj": ini.dense((d_inner, dt_rank + 2 * s.d_state), ("ffn", "state")),
+        "dt_proj": ini.dense((dt_rank, d_inner), ("state", "ffn")),
+        "dt_bias": ini.constant(
+            jnp.log(jnp.expm1(jnp.full((d_inner,), 0.01))), ("ffn",)),
+        "A_log": ini.constant(a_init, ("ffn", "state")),
+        "D": ini.ones((d_inner,), ("ffn",)),
+        "out_proj": ini.dense((d_inner, d), ("ffn", "embed")),
+    }
+
+
+def _ssm_params(p, xz, cfg):
+    """Common per-step projections. xz: (..., d_inner) post-conv branch."""
+    s = cfg.ssm
+    _, dt_rank = _dims(cfg)
+    proj = xz @ p["x_proj"]  # (..., dt_rank + 2*state)
+    dt, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # (..., d_inner)
+    return dt, b_mat, c_mat
+
+
+def _selective_scan_chunked(p, x, cfg: ModelConfig):
+    """x: (B,S,d_inner) conv+silu branch. Returns y: (B,S,d_inner)."""
+    s_cfg = cfg.ssm
+    b, s, d_inner = x.shape
+    # Pick the largest chunk <= scan_chunk that divides s exactly: padded
+    # steps would advance the recurrence (dt(0) > 0) and corrupt the state.
+    chunk = min(s_cfg.scan_chunk, s)
+    while s % chunk:
+        chunk -= 1
+    n_chunks = x.shape[1] // chunk
+    xc = x.reshape(b, n_chunks, chunk, d_inner).swapaxes(0, 1)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (d_inner, state)
+
+    def chunk_step(h0, x_blk):
+        # x_blk: (B,C,d_inner); h0: (B,d_inner,state)
+        dt, b_mat, c_mat = _ssm_params(p, x_blk, cfg)
+        dt = dt.astype(jnp.float32)
+        da = jnp.exp(dt[..., None] * a)                       # (B,C,d,n)
+        dbx = (dt * x_blk.astype(jnp.float32))[..., None] * \
+            b_mat.astype(jnp.float32)[..., None, :]           # (B,C,d,n)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        da_s, dbx_s = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h = da_s * h0[:, None] + dbx_s                        # (B,C,d,n)
+        y = jnp.einsum("bcdn,bcn->bcd", h, c_mat.astype(jnp.float32))
+        h_last = h[:, -1]
+        return h_last, y.astype(x_blk.dtype)
+
+    h0 = jnp.zeros((b, d_inner, s_cfg.d_state), jnp.float32)
+    h_final, yc = jax.lax.scan(chunk_step, h0, xc)
+    y = yc.swapaxes(0, 1).reshape(b, -1, d_inner)[:, :s]
+    return y, h_final
+
+
+def mamba_forward(p, x, cfg: ModelConfig, *, cache=None):
+    """Full-sequence (train/prefill) or single-step (decode) Mamba block.
+
+    cache: {"conv": (B, d_conv-1, d_inner), "ssm": (B, d_inner, state)}.
+    """
+    s_cfg = cfg.ssm
+    b, s, _ = x.shape
+    d_inner, _ = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xb, z = jnp.split(xz, 2, axis=-1)  # (B,S,d_inner) each
+
+    if cache is None or s > 1:
+        # Full-sequence path (training, or prefill when cache is supplied).
+        # Causal depthwise conv via shifted adds (d_conv is tiny).
+        conv = jnp.zeros_like(xb)
+        for i in range(s_cfg.d_conv):
+            shift = s_cfg.d_conv - 1 - i
+            shifted = jnp.pad(xb, ((0, 0), (shift, 0), (0, 0)))[:, :s]
+            conv = conv + shifted * p["conv_w"][i]
+        conv = jax.nn.silu(conv + p["conv_b"])
+        y, h_final = _selective_scan_chunked(p, conv, cfg)
+        if cache is not None:
+            tail = jnp.concatenate([cache["conv"], xb], axis=1)
+            new_cache = {"conv": tail[:, -(s_cfg.d_conv - 1):], "ssm": h_final}
+        else:
+            new_cache = None
+    else:
+        conv_state, h = cache["conv"], cache["ssm"]
+        window = jnp.concatenate([conv_state, xb], axis=1)  # (B,d_conv,d)
+        conv = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+        conv = jax.nn.silu(conv)[:, None]  # (B,1,d_inner)
+        dt, b_mat, c_mat = _ssm_params(p, conv, cfg)
+        a = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dt = dt[:, 0].astype(jnp.float32)
+        da = jnp.exp(dt[..., None] * a)  # (B,d,n)
+        dbx = (dt * conv[:, 0].astype(jnp.float32))[..., None] * \
+            b_mat[:, 0].astype(jnp.float32)[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0].astype(jnp.float32))
+        y = y.astype(x.dtype)[:, None]
+        new_cache = {"conv": window[:, 1:], "ssm": h}
+
+    y = y + _d_skip(p, conv)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], new_cache
+
+
+def _d_skip(p, conv):
+    return conv * p["D"]
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,233 @@
+"""Unified decoder: per-layer blocks, stacked into lax.scan groups.
+
+Consecutive layers with the same signature (block kind, MoE-ness) are stacked
+on a leading "layers" axis and executed with ``lax.scan`` — HLO size (and
+compile time) is depth-independent, which matters when the dry-run compiles
+80-layer models against a 512-chip mesh on a single host.  Hybrid patterns
+(RecurrentGemma's rec/rec/attn) fall out as short consecutive groups.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import Initializer, Box
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import rglru as rglru_lib
+from repro.models.layers import (
+    init_norm, apply_norm, init_mlp, apply_mlp,
+)
+
+
+def _layer_is_moe(cfg: ModelConfig, layer: int) -> bool:
+    return cfg.moe is not None and layer >= cfg.moe.first_dense_layers
+
+
+def layer_signature(cfg: ModelConfig, layer: int):
+    return (cfg.block_kind(layer), _layer_is_moe(cfg, layer))
+
+
+def layer_groups(cfg: ModelConfig):
+    """Consecutive same-signature runs: [(start, length, signature)]."""
+    groups = []
+    start = 0
+    sig = layer_signature(cfg, 0)
+    for l in range(1, cfg.num_layers):
+        s = layer_signature(cfg, l)
+        if s != sig:
+            groups.append((start, l - start, sig))
+            start, sig = l, s
+    groups.append((start, cfg.num_layers - start, sig))
+    return groups
+
+
+# ---------------------------------------------------------------- init
+
+def init_layer(ini: Initializer, cfg: ModelConfig, kind: str, is_moe: bool):
+    p = {"pre_norm": init_norm(ini, cfg.d_model, cfg.norm_type)}
+    if kind in ("attn", "swa", "local_attn"):
+        if cfg.mla is not None:
+            p["mixer"] = attn.init_mla(ini, cfg)
+        else:
+            p["mixer"] = attn.init_attention(ini, cfg)
+    elif kind == "mamba":
+        p["mixer"] = ssm_lib.init_mamba(ini, cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru_lib.init_rglru(ini, cfg)
+    else:
+        raise ValueError(kind)
+
+    if kind != "mamba" and (cfg.d_ff > 0 or is_moe):
+        p["post_norm"] = init_norm(ini, cfg.d_model, cfg.norm_type)
+        if is_moe:
+            p["moe"] = moe_lib.init_moe(ini, cfg)
+        else:
+            p["mlp"] = init_mlp(ini, cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    return p
+
+
+def _stack_boxed(trees):
+    """Stack boxed param trees on a new leading 'layers' axis."""
+    def stack(*boxes):
+        vals = jnp.stack([b.value for b in boxes])
+        return Box(vals, ("layers",) + boxes[0].axes)
+
+    return jax.tree.map(stack, *trees, is_leaf=lambda x: isinstance(x, Box))
+
+
+def init_blocks(ini: Initializer, cfg: ModelConfig):
+    """Returns list of stacked per-group params (leading axis = group size)."""
+    blocks = []
+    for start, length, (kind, is_moe) in layer_groups(cfg):
+        layers = [init_layer(ini, cfg, kind, is_moe) for _ in range(length)]
+        blocks.append(_stack_boxed(layers))
+    return blocks
+
+
+# ---------------------------------------------------------------- forward
+
+def layer_forward(p, x, positions, cfg: ModelConfig, kind: str, is_moe: bool,
+                  *, cache=None, cache_index=None):
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["pre_norm"], x, cfg.norm_type)
+    if kind in ("attn", "swa", "local_attn"):
+        window = cfg.window if kind in ("swa", "local_attn") else 0
+        if cfg.mla is not None:
+            out, new_cache = attn.mla_forward(
+                p["mixer"], h, positions, cfg, cache=cache,
+                cache_index=cache_index)
+        else:
+            out, new_cache = attn.attention_forward(
+                p["mixer"], h, positions, cfg, window=window, cache=cache,
+                cache_index=cache_index)
+    elif kind == "mamba":
+        out, new_cache = ssm_lib.mamba_forward(p["mixer"], h, cfg, cache=cache)
+    else:  # rglru
+        out, new_cache = rglru_lib.rglru_forward(p["mixer"], h, cfg,
+                                                 cache=cache)
+    x = x + out
+
+    if "moe" in p:
+        h = apply_norm(p["post_norm"], x, cfg.norm_type)
+        out, aux = moe_lib.moe_forward(p["moe"], h, cfg)
+        x = x + out
+    elif "mlp" in p:
+        h = apply_norm(p["post_norm"], x, cfg.norm_type)
+        x = x + apply_mlp(p["mlp"], h, cfg.mlp_type)
+    return x, new_cache, aux
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype, ring: bool = False):
+    if kind in ("attn", "swa", "local_attn"):
+        if cfg.mla is not None:
+            return attn.init_mla_cache(cfg, batch, max_len, dtype)
+        window = cfg.window if kind in ("swa", "local_attn") else 0
+        return attn.init_attn_cache(cfg, batch, max_len, window, dtype,
+                                    ring=ring)
+    if kind == "mamba":
+        return ssm_lib.init_mamba_cache(cfg, batch, dtype)
+    return rglru_lib.init_rglru_cache(cfg, batch, dtype)
+
+
+def init_group_caches(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                      ring: bool = False):
+    """One stacked cache pytree per scan group."""
+    caches = []
+    for start, length, (kind, is_moe) in layer_groups(cfg):
+        one = init_layer_cache(cfg, kind, batch, max_len, dtype, ring=ring)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (length, *a.shape)).copy()
+            if length > 1 else a[None], one))
+    return caches
+
+
+def _kind_cache_axes(cfg: ModelConfig, kind: str):
+    if kind in ("attn", "swa", "local_attn"):
+        if cfg.mla is not None:
+            return {"c_kv": ("batch", "seq", "kv_lora"),
+                    "k_rope": ("batch", "seq", None),
+                    "pos": ("batch", "seq")}
+        return {"k": ("batch", "seq", "kv_heads", "head_dim"),
+                "v": ("batch", "seq", "kv_heads", "head_dim"),
+                "pos": ("batch", "seq")}
+    if kind == "mamba":
+        return {"conv": ("batch", None, "ffn"), "ssm": ("batch", "ffn", None)}
+    return {"conv": ("batch", None, "ffn"), "h": ("batch", "ffn")}
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes per group-stacked cache (leading 'layers' axis)."""
+    out = []
+    for start, length, (kind, is_moe) in layer_groups(cfg):
+        ax = _kind_cache_axes(cfg, kind)
+        out.append(jax.tree.map(
+            lambda t: ("layers",) + t, ax,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x)))
+    return out
+
+
+def backbone_forward(params, x, positions, cfg: ModelConfig, *, caches=None,
+                     cache_index=None, remat: bool = False,
+                     layer_constraint=None, unroll: bool = False):
+    """x: (B,S,D) embeddings. Returns (hidden, new_caches, aux_sum).
+
+    unroll=True replaces lax.scan with a python loop — used by the dry-run's
+    cost-analysis pass (XLA counts while-loop bodies once; the unrolled HLO
+    yields true whole-step FLOP/byte totals without being compiled).
+    """
+    new_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    groups = layer_groups(cfg)
+    for gi, (start, length, (kind, is_moe)) in enumerate(groups):
+        p_stack = params["blocks"][gi]
+        cache_stack = caches[gi] if caches is not None else None
+
+        def inner(p, x, cache):
+            return layer_forward(p, x, positions, cfg, kind, is_moe,
+                                 cache=cache, cache_index=cache_index)
+
+        if remat and cache_stack is None:
+            inner = jax.checkpoint(inner)
+
+        def one_layer(p, x, cache):
+            # Constraint applied OUTSIDE the remat boundary: the tensor the
+            # backward pass stores is the (e.g. sequence-sharded) layer input.
+            if layer_constraint is not None:
+                x = layer_constraint(x)
+            return inner(p, x, cache)
+
+        if length == 1 or unroll:
+            outs = []
+            for i in range(length):
+                p0 = jax.tree.map(lambda a: a[i], p_stack)
+                c0 = jax.tree.map(lambda a: a[i], cache_stack) \
+                    if cache_stack is not None else None
+                x, new_cache, aux = one_layer(p0, x, c0)
+                aux_total = aux_total + aux
+                outs.append(new_cache)
+            new_caches.append(
+                jax.tree.map(lambda *a: jnp.stack(a), *outs)
+                if cache_stack is not None else None)
+        else:
+            def body(carry, xs):
+                h, aux_acc = carry
+                if cache_stack is not None:
+                    p_l, c_l = xs
+                else:
+                    p_l, c_l = xs, None
+                h, new_c, aux_l = one_layer(p_l, h, c_l)
+                return (h, aux_acc + aux_l), new_c
+
+            xs = (p_stack, cache_stack) if cache_stack is not None else p_stack
+            (x, aux_total), stacked_new = jax.lax.scan(
+                body, (x, aux_total), xs)
+            new_caches.append(stacked_new if cache_stack is not None else None)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    return x, (new_caches if caches is not None else None), aux_total

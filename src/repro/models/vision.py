@@ -1,0 +1,151 @@
+"""CPU-scale vision models for the paper's own experiments (Tables 1/2/5):
+a ResNet-style CNN (GroupNorm variant of the paper's ResNet-18-BN) and a
+ViT-Tiny classifier (Appendix D.4 spec, scaled down by default).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Initializer, unbox
+
+
+# ---------------------------------------------------------------- CNN
+
+def init_cnn(key, *, channels: int = 3, n_classes: int = 10, width: int = 32,
+             blocks: int = 2, dtype=jnp.float32):
+    ini = Initializer(key, dtype)
+    p = {"stem": ini.dense((3, 3, channels, width), (None, None, None, None),
+                           scale=0.3)}
+    for b in range(blocks):
+        w_in = width * (2 ** b)
+        w_out = width * (2 ** (b + 1))
+        p[f"block{b}"] = {
+            "conv1": ini.dense((3, 3, w_in, w_out), (None,) * 4, scale=0.1),
+            "conv2": ini.dense((3, 3, w_out, w_out), (None,) * 4, scale=0.1),
+            "skip": ini.dense((1, 1, w_in, w_out), (None,) * 4, scale=0.3),
+            "gn1_scale": ini.ones((w_out,), (None,)),
+            "gn1_bias": ini.zeros((w_out,), (None,)),
+            "gn2_scale": ini.ones((w_out,), (None,)),
+            "gn2_bias": ini.zeros((w_out,), (None,)),
+        }
+    w_final = width * (2 ** blocks)
+    p["head"] = {"w": ini.dense((w_final, n_classes), (None, None)),
+                 "b": ini.zeros((n_classes,), (None,))}
+    return unbox(p)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _group_norm(x, scale, bias, groups=8, eps=1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g).astype(jnp.float32)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, h, w, c) * scale + bias).astype(x.dtype)
+
+
+def cnn_apply(params, images):
+    """images: (B,H,W,C) -> logits (B, n_classes)."""
+    x = jax.nn.relu(_conv(images, params["stem"]))
+    b = 0
+    while f"block{b}" in params:
+        pb = params[f"block{b}"]
+        h = _conv(x, pb["conv1"], stride=2)
+        h = jax.nn.relu(_group_norm(h, pb["gn1_scale"], pb["gn1_bias"]))
+        h = _conv(h, pb["conv2"])
+        h = _group_norm(h, pb["gn2_scale"], pb["gn2_bias"])
+        x = jax.nn.relu(h + _conv(x, pb["skip"], stride=2))
+        b += 1
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------- ViT
+
+def init_vit(key, *, image_size: int = 16, patch: int = 4, channels: int = 3,
+             d_model: int = 64, layers: int = 3, heads: int = 2,
+             n_classes: int = 10, dtype=jnp.float32):
+    ini = Initializer(key, dtype)
+    n_patches = (image_size // patch) ** 2
+    d_patch = patch * patch * channels
+    p = {
+        "patch_embed": ini.dense((d_patch, d_model), (None, None)),
+        "pos_embed": ini.embedding((n_patches + 1, d_model), (None, None),
+                                   scale=0.02),
+        "cls": ini.zeros((1, 1, d_model), (None, None, None)),
+        "blocks": [],
+        "final_ln_scale": ini.ones((d_model,), (None,)),
+        "final_ln_bias": ini.zeros((d_model,), (None,)),
+        "head": {"w": ini.dense((d_model, n_classes), (None, None)),
+                 "b": ini.zeros((n_classes,), (None,))},
+    }
+    for _ in range(layers):
+        p["blocks"].append({
+            "ln1_scale": ini.ones((d_model,), (None,)),
+            "ln1_bias": ini.zeros((d_model,), (None,)),
+            "wqkv": ini.dense((d_model, 3 * d_model), (None, None)),
+            "wo": ini.dense((d_model, d_model), (None, None)),
+            "ln2_scale": ini.ones((d_model,), (None,)),
+            "ln2_bias": ini.zeros((d_model,), (None,)),
+            "w1": ini.dense((d_model, 4 * d_model), (None, None)),
+            "b1": ini.zeros((4 * d_model,), (None,)),
+            "w2": ini.dense((4 * d_model, d_model), (None, None)),
+            "b2": ini.zeros((d_model,), (None,)),
+        })
+    meta = {"patch": patch, "heads": heads}
+    return unbox(p), meta
+
+
+def _ln(x, scale, bias, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    return (((xf - mean) * jax.lax.rsqrt(var + eps)) * scale + bias).astype(x.dtype)
+
+
+def vit_apply(params, meta, images):
+    patch, heads = meta["patch"], meta["heads"]
+    b, hh, ww, c = images.shape
+    ph, pw = hh // patch, ww // patch
+    x = images.reshape(b, ph, patch, pw, patch, c).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, ph * pw, patch * patch * c)
+    x = x @ params["patch_embed"]
+    cls = jnp.broadcast_to(params["cls"], (b, 1, x.shape[-1]))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos_embed"][None]
+    d = x.shape[-1]
+    hd = d // heads
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1_scale"], blk["ln1_bias"])
+        qkv = h @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        s = x.shape[1]
+        q = q.reshape(b, s, heads, hd)
+        k = k.reshape(b, s, heads, hd)
+        v = v.reshape(b, s, heads, hd)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) * hd ** -0.5
+        att = jax.nn.softmax(att.astype(jnp.float32), axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+        x = x + o @ blk["wo"]
+        h = _ln(x, blk["ln2_scale"], blk["ln2_bias"])
+        h = jax.nn.gelu(h @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+        x = x + h
+    x = _ln(x, params["final_ln_scale"], params["final_ln_bias"])
+    return x[:, 0] @ params["head"]["w"] + params["head"]["b"]
+
+
+def classification_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

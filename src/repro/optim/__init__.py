@@ -1,0 +1,24 @@
+"""Local optimizers implementing the paper's (Theta, P_Theta) abstraction."""
+from repro.optim.api import LocalOptimizer, matrix_mask, is_hidden_matrix
+from repro.optim import adamw, muon, soap, sophia, sgd
+
+_FACTORIES = {
+    "sgd": sgd.make,
+    "adamw": adamw.make,
+    "muon": muon.make,
+    "soap": soap.make,
+    "sophia": sophia.make,
+}
+
+
+def make(name: str, **kw) -> LocalOptimizer:
+    return _FACTORIES[name](**kw)
+
+
+DEFAULT_LR = {  # paper's Appendix Table 8 defaults
+    "sgd": 0.1,
+    "adamw": 3e-4,
+    "sophia": 3e-4,
+    "muon": 3e-2,
+    "soap": 3e-3,
+}

@@ -1,0 +1,41 @@
+"""AdamW — the paper's `Local AdamW` baseline, and the fallback rule that
+Muon/SOAP/Sophia variants apply to non-matrix parameters."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import LocalOptimizer
+
+
+def make(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> LocalOptimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step, extras=None):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], gf)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state["v"], gf)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def leaf(mm, vv, p):
+            d = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return d
+
+        direction = jax.tree.map(leaf, m, v, params)
+        return direction, {"m": m, "v": v}
+
+    def get_precond(state):
+        return {"m": state["m"], "v": state["v"]}
+
+    def set_precond(state, theta):
+        return {"m": theta["m"], "v": theta["v"]}
+
+    return LocalOptimizer("adamw", init, update, get_precond, set_precond,
+                          precond_multiplier=2.0)

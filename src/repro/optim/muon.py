@@ -1,0 +1,81 @@
+"""Muon (Alg. 6/7): momentum orthogonalized by Newton–Schulz iterations.
+
+Theta = {m} (the momentum IS the alignable preconditioner state, as in the
+paper's (Theta, P) instantiation).  Applies to hidden 2-D matrices (3-D/4-D
+stacked tensors are batched matrices); other leaves use an AdamW fallback.
+
+State is *masked*: momentum exists only for matrix leaves, Adam moments only
+for the rest (None elsewhere) — on a 236B-parameter model the dense variant
+wastes ~2x params of f32 per device (found via dry-run memory_analysis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ns_ortho import ops as ns_ops
+from repro.optim.api import LocalOptimizer, matrix_mask, as_matrix
+
+
+def _ortho(m_leaf, steps, use_pallas):
+    mat, orig = as_matrix(m_leaf)
+    u = ns_ops.newton_schulz(mat, steps=steps, use_pallas=use_pallas)
+    rows, cols = mat.shape[-2], mat.shape[-1]
+    u = u * jnp.sqrt(jnp.maximum(1.0, rows / cols))
+    return u.reshape(orig) if orig is not None else u
+
+
+def _is_none(x):
+    return x is None
+
+
+def make(b1: float = 0.9, ns_steps: int = 5, weight_decay: float = 0.0,
+         use_pallas: bool = False,
+         adam_b1: float = 0.9, adam_b2: float = 0.95,
+         adam_eps: float = 1e-8, state_dtype=jnp.float32) -> LocalOptimizer:
+    def init(params):
+        mask = matrix_mask(params)
+        mom = jax.tree.map(
+            lambda im, p: jnp.zeros(p.shape, state_dtype) if im else None,
+            mask, params)
+        adam = jax.tree.map(
+            lambda im, p: None if im else jnp.zeros(p.shape, jnp.float32),
+            mask, params)
+        return {"m": mom, "am": adam, "av": adam}
+
+    def update(grads, state, params, step, extras=None):
+        mask = matrix_mask(params)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1.0 - adam_b1 ** t
+        bc2 = 1.0 - adam_b2 ** t
+
+        def leaf(is_mat, g, mm, am, av, p):
+            g = g.astype(jnp.float32)
+            if is_mat:
+                m_new = (b1 * mm.astype(jnp.float32)
+                         + (1 - b1) * g).astype(state_dtype)
+                d = _ortho(m_new.astype(jnp.float32), ns_steps, use_pallas)
+                if weight_decay:
+                    d = d + weight_decay * p.astype(jnp.float32)
+                return d, m_new, None, None
+            am_new = adam_b1 * am + (1 - adam_b1) * g
+            av_new = adam_b2 * av + (1 - adam_b2) * g * g
+            d = (am_new / bc1) / (jnp.sqrt(av_new / bc2) + adam_eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return d, None, am_new, av_new
+
+        out = jax.tree.map(leaf, mask, grads, state["m"], state["am"],
+                           state["av"], params)
+        is4 = lambda x: isinstance(x, tuple) and len(x) == 4
+        pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=is4)
+        return pick(0), {"m": pick(1), "am": pick(2), "av": pick(3)}
+
+    def get_precond(state):
+        return {"m": state["m"]}
+
+    def set_precond(state, theta):
+        return dict(state, m=theta["m"])
+
+    return LocalOptimizer("muon", init, update, get_precond, set_precond,
+                          precond_multiplier=1.0)

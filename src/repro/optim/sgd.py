@@ -1,0 +1,34 @@
+"""SGD (+momentum) — FedAvg / Local SGD baseline. Identity preconditioner."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import LocalOptimizer
+
+
+def make(momentum: float = 0.0, weight_decay: float = 0.0) -> LocalOptimizer:
+    def init(params):
+        if momentum:
+            return {"m": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+        return {"m": None}
+
+    def update(grads, state, params, step, extras=None):
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if weight_decay:
+            gf = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(jnp.float32), gf, params)
+        if momentum:
+            m = jax.tree.map(lambda mm, g: momentum * mm + g, state["m"], gf)
+            return m, {"m": m}
+        return gf, state
+
+    def get_precond(state):
+        return state
+
+    def set_precond(state, theta):
+        return theta
+
+    return LocalOptimizer("sgd", init, update, get_precond, set_precond,
+                          precond_multiplier=1.0 if momentum else 0.0)

@@ -1,0 +1,52 @@
+"""Sophia (Alg. 8/9): diagonal-Hessian (Hutchinson) preconditioning with
+element-wise clipping.  Theta = {h}.
+
+The client loop supplies ``extras = {"h_est": pytree, "h_gate": bool}`` where
+``h_est = u * (H u)`` is the Hutchinson estimate (Pearlmutter HVP) and
+``h_gate`` enables the EMA refresh (every f_h steps in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import LocalOptimizer
+
+
+def make(b1: float = 0.9, b2: float = 0.99, eps: float = 1e-12,
+         rho: float = 0.05, weight_decay: float = 0.0) -> LocalOptimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "h": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step, extras=None):
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], gf)
+        h = state["h"]
+        if extras is not None and extras.get("h_est") is not None:
+            gate = extras.get("h_gate", True)
+            gate = jnp.asarray(gate)
+
+            def h_leaf(hh, est):
+                new = b2 * hh + (1 - b2) * jnp.maximum(est.astype(jnp.float32), 0.0)
+                return jnp.where(gate, new, hh)
+
+            h = jax.tree.map(h_leaf, h, extras["h_est"])
+
+        def leaf(mm, hh, p):
+            d = jnp.clip(mm / jnp.maximum(hh, eps), -rho, rho)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return d
+
+        direction = jax.tree.map(leaf, m, h, params)
+        return direction, {"m": m, "h": h}
+
+    def get_precond(state):
+        return {"h": state["h"]}
+
+    def set_precond(state, theta):
+        return dict(state, h=theta["h"])
+
+    return LocalOptimizer("sophia", init, update, get_precond, set_precond,
+                          needs_hessian=True, precond_multiplier=1.0)

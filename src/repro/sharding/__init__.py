@@ -1,0 +1,8 @@
+from repro.sharding.partitioning import (
+    LogicalAxisRules,
+    TRAIN_RULES,
+    SERVE_RULES,
+    resolve_spec,
+    logical_to_sharding,
+    shard_params_spec,
+)

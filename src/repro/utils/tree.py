@@ -1,0 +1,76 @@
+"""Pytree arithmetic helpers used across the federated runtime.
+
+All helpers are jit-friendly (pure jnp) and operate leaf-wise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(s, a, b):
+    """s*a + b, leaf-wise."""
+    return jax.tree.map(lambda x, y: s * x + y, a, b)
+
+
+def tree_lerp(a, b, t):
+    """(1-t)*a + t*b, leaf-wise."""
+    return jax.tree.map(lambda x, y: (1.0 - t) * x + t * y, a, b)
+
+
+def tree_mean(trees):
+    """Mean of a list of pytrees (same treedef)."""
+    n = len(trees)
+    acc = trees[0]
+    for t in trees[1:]:
+        acc = tree_add(acc, t)
+    return tree_scale(acc, 1.0 / n)
+
+
+def tree_stack_mean(tree):
+    """Mean over leading (client) axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves)
+
+
+def tree_norm_sq(a):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x: jnp.vdot(x, x), a))
+    return sum(leaves)
+
+
+def tree_size(a) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a
+    )
+
+
+def global_norm(a):
+    return jnp.sqrt(tree_norm_sq(a))

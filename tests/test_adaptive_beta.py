@@ -1,0 +1,77 @@
+"""Beyond-paper: drift-adaptive correction strength (beta="auto").
+
+beta_r = beta_max * d/(1+d) with d the normalized drift of the previous
+round: correction backs off when client geometries agree (where fixed beta
+only injects staleness) and ramps up under real drift.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.core import make_round_fn, init_server
+
+D, OUT, C, K = 16, 8, 6, 4
+
+
+def _problem(hetero):
+    key = jax.random.key(0)
+    W = jax.random.normal(key, (D, OUT))
+    mats = []
+    for i in range(C):
+        k1, k2 = jax.random.split(jax.random.key(i + 1))
+        Q, _ = jnp.linalg.qr(jax.random.normal(k1, (D, D)))
+        s = jnp.exp(jax.random.uniform(k2, (D,), minval=-hetero,
+                                       maxval=hetero))
+        mats.append(Q * s)
+
+    def loss_fn(p, b):
+        X, Y = b
+        return jnp.mean((X @ p["w"] - Y) ** 2)
+
+    def batches(key):
+        ks = jax.random.split(key, C)
+        Xs = jnp.stack([jax.random.normal(ks[i], (K, 16, D)) @ mats[i]
+                        for i in range(C)])
+        return Xs, jnp.einsum("ckbd,do->ckbo", Xs, W)
+
+    return {"w": jnp.zeros((D, OUT))}, loss_fn, batches
+
+
+def _run(beta, hetero, rounds=15, beta_max=0.7):
+    params, loss_fn, batches = _problem(hetero)
+    opt = optim.make("soap")
+    rf = make_round_fn(loss_fn, opt, lr=0.05, local_steps=K, beta=beta,
+                       beta_max=beta_max)
+    server = init_server(params, opt)
+    rng = jax.random.key(3)
+    betas, losses = [], []
+    for _ in range(rounds):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        server, m = rf(server, batches(k1), k2)
+        betas.append(float(m["beta"]))
+        losses.append(float(m["loss"]))
+    return betas, losses
+
+
+def test_auto_beta_bounded():
+    betas, _ = _run("auto", hetero=1.5)
+    assert all(0.0 <= b <= 0.7 + 1e-6 for b in betas)
+    assert betas[0] == 0.0  # no drift signal before round 1
+
+
+def test_auto_beta_responds_to_drift():
+    lo, _ = _run("auto", hetero=0.1)
+    hi, _ = _run("auto", hetero=2.0)
+    # stronger curvature heterogeneity => larger measured drift => larger beta
+    assert max(hi) > max(lo)
+
+
+def test_auto_beta_converges():
+    _, losses = _run("auto", hetero=1.5, rounds=25)
+    assert losses[-1] < 0.2 * losses[0]
+
+
+def test_fixed_beta_metric_reported():
+    betas, _ = _run(0.5, hetero=1.0, rounds=3)
+    assert all(b == 0.5 for b in betas)

@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests (deliverable f): reduced variant of each
+assigned family runs one forward + one train step on CPU; output shapes and
+finiteness asserted.  Also checks decode/prefill consistency vs the full
+forward (f32)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs, optim
+from repro.models import model as M
+from repro.launch.steps import make_train_step
+
+
+def _tokens(cfg, key, b=2, s=16):
+    shape = (b, s, cfg.num_codebooks) if cfg.num_codebooks > 1 else (b, s)
+    return jax.random.randint(key, shape, 0, cfg.vocab_size)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.key(0)
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = configs.get_reduced(arch)
+    params = M.init_params(cfg, rng)
+    toks = _tokens(cfg, rng)
+    logits, _, aux = M.forward(params, {"tokens": toks}, cfg)
+    expected = ((2, 16, cfg.num_codebooks, cfg.vocab_size)
+                if cfg.num_codebooks > 1 else (2, 16, cfg.vocab_size))
+    assert logits.shape == expected
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_train_step(arch, rng):
+    """One FedPAC(Muon) train step: loss finite, params move, dtypes stable."""
+    cfg = configs.get_reduced(arch)
+    params = M.init_params(cfg, rng)
+    opt = optim.make("muon")
+    step = make_train_step(cfg, opt, lr=1e-2, beta=0.5, remat=False)
+    opt_state = opt.init(params)
+    gg = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    toks = _tokens(cfg, rng)
+    batch = {"tokens": toks, "labels": toks}
+    new_params, new_state, loss = jax.jit(step)(params, opt_state, gg, batch,
+                                                jnp.int32(0))
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+    moved = jax.tree.leaves(jax.tree.map(
+        lambda a, b: jnp.any(a != b), new_params, params))
+    assert any(bool(m) for m in moved)
+    for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(params)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_decode_matches_forward(arch, rng):
+    cfg = configs.get_reduced(arch).replace(dtype="float32")
+    params = M.init_params(cfg, rng)
+    b, s = 2, 12
+    toks = _tokens(cfg, rng, b, s)
+    full, _, _ = M.forward(params, {"tokens": toks}, cfg)
+    last_pre, caches = M.prefill(params, {"tokens": toks[:, :s - 1]}, cfg,
+                                 max_len=s + 4)
+    dec, _ = M.decode_step(params, toks[:, s - 1:s], caches,
+                           jnp.int32(s - 1), cfg)
+    assert jnp.max(jnp.abs(full[:, -1] - dec)) < 2e-4
+    assert jnp.max(jnp.abs(full[:, s - 2] - last_pre)) < 2e-4
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "recurrentgemma-2b",
+                                  "mixtral-8x22b"])
+def test_ring_cache_long_decode(arch, rng):
+    """Sub-quadratic archs decode past the window with a ring KV buffer."""
+    cfg = configs.get_reduced(arch).replace(dtype="float32")
+    if cfg.window:
+        cfg = cfg.replace(window=8)
+    assert cfg.supports_long_decode
+    params = M.init_params(cfg, rng)
+    b = 2
+    caches = M.init_caches(cfg, b, max_len=64, ring=True)
+    tok = _tokens(cfg, rng, b, 1)
+    for i in range(20):  # > window
+        logits, caches = M.decode_step(params, tok, caches, jnp.int32(i), cfg)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_vlm_embeds_path(rng):
+    cfg = configs.get_reduced("qwen2-vl-7b")
+    params = M.init_params(cfg, rng)
+    emb = jax.random.normal(rng, (2, 16, cfg.d_model), cfg.jnp_dtype)
+    labels = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+    loss = M.loss_fn(params, {"embeds": emb, "tokens": None,
+                              "labels": labels}, cfg)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "falcon-mamba-7b": (64, 4096, 1, 1, 0, 65024),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+    }
+    for arch, (l, d, h, kv, ff, v) in spec.items():
+        cfg = configs.get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (l, d, h, kv, ff, v), arch

@@ -1,0 +1,170 @@
+"""Checkpoint round-trips, MoE ragged-vs-dense oracle, RoPE properties."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim, configs
+from repro.checkpoint import (
+    save_pytree, load_pytree, CheckpointManager,
+)
+from repro.core.server import ServerState, init_server
+from repro.models import model as M
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.moe import init_moe, moe_forward
+from repro.models.param import Initializer, unbox
+from repro.models.rope import apply_rope, default_positions
+
+KEY = jax.random.key(0)
+
+
+# ---------------------------------------------------------------- checkpoint
+
+class TestCheckpoint:
+    def test_pytree_roundtrip_with_none_leaves(self, tmp_path):
+        tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+                "b": {"c": None, "d": jnp.ones(4)},
+                "e": [jnp.zeros((2,)), None]}
+        p = str(tmp_path / "t.npz")
+        save_pytree(tree, p)
+        out = load_pytree(tree, p)
+        assert out["b"]["c"] is None and out["e"][1] is None
+        assert out["a"].dtype == jnp.bfloat16
+        assert jnp.array_equal(out["a"], tree["a"])
+
+    def test_optimizer_state_roundtrip(self, tmp_path):
+        params = {"layer": {"w": jax.random.normal(KEY, (16, 8))},
+                  "norm": {"scale": jnp.ones(8)}}
+        opt = optim.make("muon")
+        state = opt.init(params)
+        g = jax.tree.map(jnp.ones_like, params)
+        _, state = opt.update(g, state, params, jnp.int32(0))
+        p = str(tmp_path / "opt.npz")
+        save_pytree(state, p)
+        out = load_pytree(state, p)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(state)):
+            assert jnp.allclose(a, b)
+
+    def test_manager_rotation_and_restore(self, tmp_path):
+        params = {"w": jnp.zeros((4, 4))}
+        opt = optim.make("sgd")
+        server = init_server(params, opt)
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for r in range(1, 5):
+            server = ServerState(
+                jax.tree.map(lambda x: x + 1.0, server.params),
+                None, server.g_global, r)
+            mgr.save(server)
+        steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step"))
+        assert len(steps) == 2  # rotation kept last 2
+        restored = mgr.restore(server)
+        assert restored.round == 4
+        assert float(restored.params["w"][0, 0]) == 4.0
+
+
+# ---------------------------------------------------------------- MoE oracle
+
+def _dense_moe_oracle(p, x, cfg):
+    """Per-token dense mixture: softmax top-k over experts, computed naively."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, m.top_k)
+    topw = topw / topw.sum(-1, keepdims=True)
+    outs = []
+    for t in range(xf.shape[0]):
+        acc = jnp.zeros(d, xf.dtype)
+        for j in range(m.top_k):
+            e = topi[t, j]
+            h = jax.nn.silu(xf[t] @ p["w_gate"][e]) * (xf[t] @ p["w_up"][e])
+            acc = acc + topw[t, j] * (h @ p["w_down"][e])
+        outs.append(acc)
+    y = jnp.stack(outs)
+    if m.num_shared_experts:
+        from repro.models.layers import apply_mlp
+        y = y + apply_mlp(p["shared"], xf, "swiglu")
+    return y.reshape(b, s, d)
+
+
+def test_moe_ragged_matches_dense_oracle():
+    cfg = ModelConfig(
+        name="t", num_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+        d_ff=32, vocab_size=64,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
+                      num_shared_experts=1))
+    ini = Initializer(KEY, jnp.float32)
+    p = unbox(init_moe(ini, cfg))
+    x = jax.random.normal(jax.random.key(5), (2, 6, 16))
+    got, aux = moe_forward(p, x, cfg)
+    want = _dense_moe_oracle(p, x, cfg)
+    assert jnp.max(jnp.abs(got - want)) < 1e-4
+    assert float(aux) >= 0.0
+
+
+def test_moe_router_gradient_flows():
+    cfg = ModelConfig(
+        name="t", num_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+        d_ff=32, vocab_size=64,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=16))
+    ini = Initializer(KEY, jnp.float32)
+    p = unbox(init_moe(ini, cfg))
+    x = jax.random.normal(jax.random.key(6), (2, 4, 16))
+
+    def loss(p):
+        y, aux = moe_forward(p, x, cfg)
+        return jnp.sum(y ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.sum(jnp.abs(g["router"]))) > 0.0
+    assert float(jnp.sum(jnp.abs(g["w_gate"]))) > 0.0
+
+
+# ---------------------------------------------------------------- RoPE
+
+class TestRope:
+    def test_norm_preserved(self):
+        x = jax.random.normal(KEY, (2, 8, 3, 16))
+        pos = default_positions(2, 8)
+        y = apply_rope(x, pos)
+        assert jnp.allclose(jnp.linalg.norm(x, axis=-1),
+                            jnp.linalg.norm(y, axis=-1), atol=1e-5)
+
+    def test_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i-j."""
+        q = jax.random.normal(KEY, (1, 1, 1, 8))
+        k = jax.random.normal(jax.random.key(1), (1, 1, 1, 8))
+
+        def dot_at(i, j):
+            qi = apply_rope(q, jnp.full((1, 1), i, jnp.int32))
+            kj = apply_rope(k, jnp.full((1, 1), j, jnp.int32))
+            return float(jnp.vdot(qi, kj))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(10, 8), abs=1e-4)
+        assert dot_at(7, 7) == pytest.approx(dot_at(0, 0), abs=1e-4)
+
+    def test_partial_rope_passthrough(self):
+        x = jax.random.normal(KEY, (1, 4, 1, 16))
+        pos = default_positions(1, 4)
+        y = apply_rope(x, pos, fraction=0.5)
+        assert jnp.array_equal(x[..., 8:], y[..., 8:])  # untouched half
+        assert not jnp.array_equal(x[..., :8], y[..., :8])
+
+    def test_mrope_equals_rope_when_positions_identical(self):
+        x = jax.random.normal(KEY, (2, 6, 2, 16))
+        pos1 = default_positions(2, 6)
+        pos3 = default_positions(2, 6, mrope=True)
+        y1 = apply_rope(x, pos1)
+        y3 = apply_rope(x, pos3, mrope_sections=(4, 2, 2))
+        assert jnp.max(jnp.abs(y1 - y3)) < 1e-5
+
+    def test_mrope_differs_when_axes_diverge(self):
+        x = jax.random.normal(KEY, (1, 4, 1, 16))
+        pos = default_positions(1, 4, mrope=True)
+        pos2 = pos.at[..., 1].add(7)  # shift the "height" axis
+        y1 = apply_rope(x, pos, mrope_sections=(4, 2, 2))
+        y2 = apply_rope(x, pos2, mrope_sections=(4, 2, 2))
+        assert float(jnp.max(jnp.abs(y1 - y2))) > 1e-3

@@ -1,0 +1,92 @@
+"""Federated runtime integration: every paper algorithm runs end-to-end on a
+tiny vision problem; scaffold state bookkeeping; comm accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_image_classification, dirichlet_partition
+from repro.models.vision import (
+    init_cnn, cnn_apply, init_vit, vit_apply, classification_loss, accuracy,
+)
+from repro.fed import FedConfig, FederatedExperiment, parse_algorithm
+
+N_CLIENTS = 6
+
+
+@pytest.fixture(scope="module")
+def problem():
+    X, y = make_image_classification(600, image_size=8, n_classes=4, seed=0,
+                                     noise=1.0)
+    parts = dirichlet_partition(y, N_CLIENTS, 0.2, seed=0)
+    params = init_cnn(jax.random.key(0), n_classes=4, width=4, blocks=1)
+
+    def loss_fn(p, batch):
+        return classification_loss(cnn_apply(p, batch["x"]), batch["y"])
+
+    def batch_fn(cid, rng):
+        idx = rng.choice(parts[cid], size=4)
+        return {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return params, loss_fn, batch_fn
+
+
+ALGOS = ["fedavg", "scaffold", "fedcm", "local_adamw", "local_sophia",
+         "local_muon", "local_soap", "fedpac_sophia", "fedpac_muon",
+         "fedpac_soap", "fedpac_soap_light", "align_only_soap",
+         "correct_only_muon"]
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_algorithm_runs(problem, algo):
+    params, loss_fn, batch_fn = problem
+    fed = FedConfig(algorithm=algo, n_clients=N_CLIENTS, participation=0.5,
+                    rounds=2, local_steps=3, svd_rank=2)
+    exp = FederatedExperiment(fed, params, loss_fn, batch_fn)
+    hist = exp.run()
+    assert len(hist) == 2
+    assert np.isfinite(hist[-1]["loss"])
+    assert exp.comm_bytes_per_round() > 0
+
+
+def test_parse_algorithm():
+    assert parse_algorithm("fedavg") == ("sgd", False, False, False)
+    assert parse_algorithm("fedpac_soap") == ("soap", True, True, False)
+    assert parse_algorithm("fedpac_soap_light") == ("soap", True, True, True)
+    assert parse_algorithm("local_muon") == ("muon", False, False, False)
+    assert parse_algorithm("fedcm") == ("sgd", False, True, False)
+    assert parse_algorithm("align_only_soap") == ("soap", True, False, False)
+
+
+def test_scaffold_state_updates(problem):
+    params, loss_fn, batch_fn = problem
+    fed = FedConfig(algorithm="scaffold", n_clients=N_CLIENTS,
+                    participation=1.0, rounds=1, local_steps=3)
+    exp = FederatedExperiment(fed, params, loss_fn, batch_fn)
+    c0 = jax.tree.leaves(exp.scaffold_state.c_clients)[0].copy()
+    exp.run()
+    c1 = jax.tree.leaves(exp.scaffold_state.c_clients)[0]
+    assert bool(jnp.any(c0 != c1))  # control variates moved
+
+
+def test_fedpac_comm_cost_exceeds_local(problem):
+    params, loss_fn, batch_fn = problem
+    costs = {}
+    for algo in ["local_soap", "fedpac_soap", "fedpac_soap_light"]:
+        fed = FedConfig(algorithm=algo, n_clients=N_CLIENTS,
+                        participation=0.5, rounds=1, local_steps=2,
+                        svd_rank=2)
+        exp = FederatedExperiment(fed, params, loss_fn, batch_fn)
+        exp.run()
+        costs[algo] = exp.comm_bytes_per_round()
+    assert costs["local_soap"] < costs["fedpac_soap_light"] \
+        < costs["fedpac_soap"]
+
+
+def test_vit_apply_shapes():
+    params, meta = init_vit(jax.random.key(0), image_size=8, patch=4,
+                            d_model=32, layers=1, heads=2, n_classes=5)
+    x = jnp.zeros((3, 8, 8, 3))
+    logits = vit_apply(params, meta, x)
+    assert logits.shape == (3, 5)
+    assert float(accuracy(logits, jnp.zeros(3, jnp.int32))) >= 0.0

@@ -1,0 +1,90 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+executed in interpret mode on CPU (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.ns_ortho import ops as ns_ops, ref as ns_ref
+from repro.kernels.ns_ortho.kernel import matmul_fused
+from repro.kernels.sophia_update import ops as so_ops, ref as so_ref
+from repro.kernels.soap_rotate import ops as sr_ops, ref as sr_ref
+from repro.kernels.soap_rotate.kernel import adam_moments
+
+KEY = jax.random.key(7)
+
+MM_SHAPES = [(8, 8, 8), (128, 128, 128), (64, 200, 96), (130, 257, 50),
+             (256, 64, 384)]
+
+
+@pytest.mark.parametrize("m,k,n", MM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_fused(m, k, n, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    lhs = jax.random.normal(k1, (m, k), dtype)
+    rhs = jax.random.normal(k2, (k, n), dtype)
+    aux = jax.random.normal(k3, (m, n), dtype)
+    got = matmul_fused(lhs, rhs, aux, alpha=0.5, beta=-2.0, interpret=True)
+    want = (0.5 * (lhs.astype(jnp.float32) @ rhs.astype(jnp.float32))
+            - 2.0 * aux.astype(jnp.float32)).astype(dtype)
+    tol = 1e-5 if dtype == jnp.float32 else 6e-2
+    assert jnp.max(jnp.abs(got.astype(jnp.float32)
+                           - want.astype(jnp.float32))) < tol * max(1, k ** 0.5)
+
+
+@pytest.mark.parametrize("shape", [(32, 48), (128, 128), (96, 250), (257, 64)])
+def test_newton_schulz_pallas_matches_ref(shape):
+    g = jax.random.normal(KEY, shape, jnp.float32)
+    want = ns_ref.newton_schulz(g)
+    got = ns_ops.newton_schulz_pallas(g, interpret=True)
+    assert jnp.max(jnp.abs(want - got)) < 1e-4
+
+
+def test_newton_schulz_singular_values_near_one():
+    g = jax.random.normal(KEY, (64, 128), jnp.float32)
+    y = ns_ref.newton_schulz(g)
+    s = jnp.linalg.svd(y, compute_uv=False)
+    assert float(s.max()) < 1.35 and float(s.min()) > 0.45
+
+
+@pytest.mark.parametrize("shape", [(17,), (64, 64), (3, 40, 50), (2048,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sophia_update_kernel(shape, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    g = jax.random.normal(k1, shape, dtype)
+    m = jax.random.normal(k2, shape, jnp.float32)
+    h = jax.random.uniform(k3, shape, jnp.float32)
+    d_ref, m_ref = so_ref.sophia_update(g, m, h)
+    d_pal, m_pal = so_ops.sophia_update(g, m, h, use_pallas=True,
+                                        interpret=True)
+    assert jnp.max(jnp.abs(d_ref - d_pal)) < 1e-5
+    assert jnp.max(jnp.abs(m_ref - m_pal)) < 1e-5
+    assert float(jnp.max(jnp.abs(d_pal))) <= 0.05 + 1e-6  # clip bound
+
+
+@pytest.mark.parametrize("m,n", [(16, 24), (128, 128), (100, 60)])
+def test_soap_rotate_kernel(m, n):
+    ks = jax.random.split(KEY, 5)
+    g = jax.random.normal(ks[0], (m, n), jnp.float32)
+    ql, _ = jnp.linalg.qr(jax.random.normal(ks[1], (m, m)))
+    qr_, _ = jnp.linalg.qr(jax.random.normal(ks[2], (n, n)))
+    mm = jax.random.normal(ks[3], (m, n))
+    vv = jax.random.uniform(ks[4], (m, n))
+    want = sr_ref.soap_rotated_update(g, ql, qr_, mm, vv)
+    got = sr_ops.soap_rotated_update(g, ql, qr_, mm, vv, use_pallas=True,
+                                     interpret=True)
+    for w, o in zip(want, got):
+        assert jnp.max(jnp.abs(w - o)) < 5e-5
+
+
+@pytest.mark.parametrize("shape", [(40,), (128, 256)])
+def test_adam_moments_kernel(shape):
+    ks = jax.random.split(KEY, 3)
+    g = jax.random.normal(ks[0], shape)
+    m = jax.random.normal(ks[1], shape)
+    v = jax.random.uniform(ks[2], shape)
+    n, m2, v2 = adam_moments(g, m, v, b1=0.9, b2=0.99, interpret=True)
+    m_want = 0.9 * m + 0.1 * g
+    v_want = 0.99 * v + 0.01 * g * g
+    assert jnp.allclose(m2, m_want, atol=1e-6)
+    assert jnp.allclose(v2, v_want, atol=1e-6)
+    assert jnp.allclose(n, m_want / (jnp.sqrt(v_want) + 1e-8), atol=1e-5)

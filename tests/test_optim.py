@@ -1,0 +1,138 @@
+"""Optimizer unit tests: descent, state round-trips, paper Assumption 5.4
+(coercivity/boundedness) spot checks."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.optim.api import matrix_mask, as_matrix
+from repro.utils.tree import tree_dot, tree_norm_sq
+
+KEY = jax.random.key(0)
+
+
+def _quadratic_problem():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    W = jax.random.normal(k1, (12, 8))
+    X = jax.random.normal(k2, (128, 12))
+    Y = X @ W
+    params = {"layer": {"w": jax.random.normal(k3, (12, 8)) * 0.1,
+                        "b": jnp.zeros(8)},
+              "embed": {"tok": jnp.zeros((4, 8))}}
+
+    def loss(p):
+        return jnp.mean((X @ p["layer"]["w"] + p["layer"]["b"] - Y) ** 2)
+
+    return params, loss
+
+
+@pytest.mark.parametrize("name,lr", [("sgd", 0.05), ("adamw", 0.05),
+                                     ("muon", 0.05), ("soap", 0.05),
+                                     ("sophia", 0.5)])
+def test_descent(name, lr):
+    params, loss = _quadratic_problem()
+    opt = optim.make(name)
+    state = opt.init(params)
+    p = params
+
+    @jax.jit
+    def step(p, state, i):
+        g = jax.grad(loss)(p)
+        extras = None
+        if opt.needs_hessian:
+            u = jax.tree.map(
+                lambda x: jnp.sign(jax.random.normal(
+                    jax.random.fold_in(KEY, i), x.shape)), p)
+            _, hvp = jax.jvp(jax.grad(loss), (p,), (u,))
+            extras = {"h_est": jax.tree.map(lambda a, b: a * b, u, hvp),
+                      "h_gate": True}
+        d, state = opt.update(g, state, p, i, extras)
+        return jax.tree.map(lambda x, dd: x - lr * dd, p, d), state
+
+    l0 = float(loss(p))
+    for i in range(50):
+        p, state = step(p, state, jnp.int32(i))
+    assert float(loss(p)) < 0.5 * l0
+
+
+@pytest.mark.parametrize("name", ["muon", "soap", "sophia", "adamw", "sgd"])
+def test_precond_roundtrip(name):
+    params, loss = _quadratic_problem()
+    opt = optim.make(name)
+    state = opt.init(params)
+    g = jax.grad(loss)(params)
+    _, state = opt.update(g, state, params, jnp.int32(0),
+                          {"h_est": jax.tree.map(jnp.abs, g), "h_gate": True}
+                          if opt.needs_hessian else None)
+    theta = opt.get_precond(state)
+    state2 = opt.set_precond(state, theta)
+    d1, _ = opt.update(g, state, params, jnp.int32(1))
+    d2, _ = opt.update(g, state2, params, jnp.int32(1))
+    for a, b in zip(jax.tree.leaves(d1), jax.tree.leaves(d2)):
+        assert jnp.allclose(a, b, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["adamw", "sophia", "soap"])
+def test_coercivity_assumption(name):
+    """Assumption 5.4(i): <g, P(g)> > 0 after warmup (descent direction)."""
+    params, loss = _quadratic_problem()
+    opt = optim.make(name)
+    state = opt.init(params)
+    p = params
+    for i in range(5):
+        g = jax.grad(loss)(p)
+        extras = ({"h_est": jax.tree.map(lambda x: jnp.abs(x) + 0.1, g),
+                   "h_gate": True} if opt.needs_hessian else None)
+        d, state = opt.update(g, state, p, jnp.int32(i), extras)
+        p = jax.tree.map(lambda x, dd: x - 0.01 * dd, p, d)
+    g = jax.grad(loss)(p)
+    d, _ = opt.update(g, state, p, jnp.int32(5))
+    assert float(tree_dot(g, d)) > 0.0
+
+
+def test_muon_direction_orthogonalized():
+    params, loss = _quadratic_problem()
+    opt = optim.make("muon", b1=0.0)
+    state = opt.init(params)
+    g = jax.grad(loss)(params)
+    d, _ = opt.update(g, state, params, jnp.int32(0))
+    w_dir = d["layer"]["w"] / jnp.sqrt(jnp.maximum(1.0, 12 / 8))
+    s = jnp.linalg.svd(w_dir, compute_uv=False)
+    assert float(s.max()) < 1.4 and float(s.min()) > 0.3
+
+
+def test_sophia_clip_bound():
+    params, loss = _quadratic_problem()
+    opt = optim.make("sophia", rho=0.03)
+    state = opt.init(params)
+    g = jax.grad(loss)(params)
+    d, _ = opt.update(g, state, params, jnp.int32(0),
+                      {"h_est": jax.tree.map(jnp.abs, g), "h_gate": True})
+    for leaf in jax.tree.leaves(d):
+        assert float(jnp.max(jnp.abs(leaf))) <= 0.03 + 1e-7
+
+
+def test_matrix_mask_excludes_embeddings_and_vectors():
+    params = {"embed": {"tok": jnp.zeros((100, 32))},
+              "layers": [{"mixer": {"wq": jnp.zeros((32, 32))},
+                          "pre_norm": {"scale": jnp.zeros(32)}}],
+              "head": {"w": jnp.zeros((32, 100))}}
+    mask = matrix_mask(params)
+    assert mask["layers"][0]["mixer"]["wq"] is True
+    assert mask["embed"]["tok"] is False
+    assert mask["head"]["w"] is False
+    assert mask["layers"][0]["pre_norm"]["scale"] is False
+
+
+def test_as_matrix_conv_flattening():
+    x = jnp.zeros((3, 3, 8, 16))
+    mat, orig = as_matrix(x)
+    assert mat.shape == (72, 16) and orig == (3, 3, 8, 16)
+
+
+def test_soap_one_sided_for_huge_dims():
+    opt = optim.make("soap", max_precond_dim=32)
+    params = {"layer": {"w": jnp.zeros((64, 16))}}
+    state = opt.init(params)
+    st = state["mat"]["layer"]["w"]
+    assert "L" not in st and "R" in st  # 64 > 32 -> left side skipped

@@ -1,0 +1,85 @@
+"""Property tests: Dirichlet partitioner and divisibility-safe sharding."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.data import dirichlet_partition, heterogeneity_stat
+from repro.sharding.partitioning import (
+    resolve_spec, greedy_spec, TRAIN_RULES, SERVE_RULES,
+)
+
+
+def _mesh(shape=(2, 4), axes=("data", "model")):
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+# ---------------------------------------------------------------- partition
+
+@given(st.integers(2, 20), st.floats(0.05, 10.0), st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_partition_is_exact_cover(n_clients, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 500)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=seed)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == 500
+    assert len(np.unique(all_idx)) == 500  # every sample exactly once
+
+
+def test_heterogeneity_monotone_in_alpha():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 4000)
+    stats = []
+    for alpha in [100.0, 1.0, 0.1, 0.05]:
+        parts = dirichlet_partition(labels, 20, alpha, seed=1)
+        stats.append(heterogeneity_stat(parts, labels))
+    assert stats[0] < stats[-1]  # smaller alpha => more skew
+    assert stats[0] < 0.2 and stats[-1] > 0.5
+
+
+# ---------------------------------------------------------------- sharding
+
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 5, 15, 16, 24, 64, 128, 960, 2560]),
+                  min_size=1, max_size=4),
+    names=st.lists(st.sampled_from(["batch", "embed", "ffn", "heads",
+                                    "kv_heads", "vocab", None]),
+                   min_size=4, max_size=4),
+)
+@settings(max_examples=60, deadline=None)
+def test_resolve_spec_always_valid(dims, names):
+    mesh = _mesh((2, 4), ("data", "model"))
+    spec = resolve_spec(dims, names[: len(dims)], mesh, TRAIN_RULES)
+    used = []
+    for dim, entry in zip(dims, tuple(spec) + (None,) * len(dims)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        factor = 1
+        for ax in axes:
+            assert ax not in used, "mesh axis reused"
+            used.append(ax)
+            factor *= mesh.shape[ax]
+        assert dim % factor == 0, "indivisible assignment"
+
+
+def test_resolve_spec_replicates_indivisible_kv_heads():
+    mesh = _mesh((2, 16), ("data", "model"))
+    # 5 kv heads cannot shard over 16-way model axis
+    spec = resolve_spec((8, 1024, 5, 64), ("batch", "seq", "kv_heads",
+                                           "head_dim"), mesh, SERVE_RULES)
+    assert len(spec) < 3 or spec[2] is None
+    # but head_dim (64) picks the model axis instead
+    assert "model" in str(spec)
+
+
+def test_greedy_spec_trailing_dims():
+    mesh = _mesh((2, 4), ("data", "model"))
+    assert greedy_spec((32, 64), mesh) == P("data", "model")
+    assert greedy_spec((7,), mesh) == P()
+    assert greedy_spec((10, 32, 64), mesh) == P(None, "data", "model")
+    # indivisible dims stay replicated
+    assert greedy_spec((3, 5), mesh) == P()
