@@ -94,6 +94,7 @@ def save_server_state(server: ServerState, directory: str, step: int):
         save_pytree(server.theta, os.path.join(d, "theta.npz"))
     with open(os.path.join(d, "meta.json"), "w") as f:
         json.dump({"round": server.round,
+                   "theta_version": server.theta_version,
                    "has_theta": server.theta is not None}, f)
 
 
@@ -108,7 +109,9 @@ def load_server_state(template: ServerState, directory: str,
     theta = None
     if meta["has_theta"] and template.theta is not None:
         theta = load_pytree(template.theta, os.path.join(d, "theta.npz"))
-    return ServerState(params, theta, gg, meta["round"])
+    # pre-theta_version checkpoints: Theta (if any) dates from the saved round
+    return ServerState(params, theta, gg, meta["round"],
+                       meta.get("theta_version", meta["round"]))
 
 
 def latest_step(directory: str) -> int:

@@ -1,7 +1,10 @@
 """FedPAC core: the paper's contribution as composable JAX modules."""
 from repro.core.client import LocalRunConfig, client_round, hutchinson_estimate
-from repro.core.server import ServerState, init_server
-from repro.core.fedpac import make_round_fn
+from repro.core.server import (
+    ServerState, init_server, aggregate_round, weighted_client_mean,
+    normalized_client_mean,
+)
+from repro.core.fedpac import make_round_fn, zero_theta
 from repro.core.fedsoa import make_fedsoa_round_fn, make_variant_round_fn, VARIANTS
 from repro.core.drift import drift_metric, drift_per_layer, spectral_drift
 from repro.core.compression import (

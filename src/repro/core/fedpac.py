@@ -32,6 +32,9 @@ from repro.core.drift import drift_metric
 from repro.utils.tree import tree_norm_sq
 from repro.optim.api import LocalOptimizer
 
+# cap for the drift-adaptive beta="auto" rule (both runtimes)
+BETA_MAX_AUTO = 0.7
+
 
 def make_round_fn(
     loss_fn: Callable,
@@ -45,7 +48,7 @@ def make_round_fn(
     hessian_freq: int = 10,
     server_lr: float = 1.0,
     compress_fn=None,       # FedPAC_light: Theta codec (see core.compression)
-    beta_max: float = 0.7,  # cap for beta="auto"
+    beta_max: float = BETA_MAX_AUTO,  # cap for beta="auto"
     jit: bool = True,
 ):
     """Returns round_fn(server_state, batches, rng) -> (server_state, metrics).
@@ -95,18 +98,22 @@ def make_round_fn(
         theta = server.theta
         if theta is None:
             # round 0: no reference yet -> align to the fresh (zero) state.
-            theta = _zero_theta(opt, server.params)
+            theta = zero_theta(opt, server.params)
         p, th, g, metrics = round_fn(server.params, theta, server.g_global,
                                      batches, rng, beta_cell["value"])
         if adaptive and correct:
             d = metrics["norm_drift"]
             beta_cell["value"] = (beta_max * d / (1.0 + d)).astype(jnp.float32)
-        return ServerState(p, th, g, server.round + 1), metrics
+        return ServerState(p, th, g, server.round + 1, server.round + 1), \
+            metrics
 
     return driver
 
 
-def _zero_theta(opt: LocalOptimizer, params):
+def zero_theta(opt: LocalOptimizer, params):
+    """Fresh (zero) preconditioner pytree for ``opt`` on ``params``.
+
+    Round 0 has no global reference yet; both runtimes align to this."""
     state = jax.eval_shape(opt.init, params)
     theta_shape = jax.eval_shape(lambda s: opt.get_precond(s), state)
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), theta_shape)

@@ -1,0 +1,17 @@
+"""Buffered-asynchronous federated runtime with staleness-aware FedPAC.
+
+Subsystem layout:
+  latency.py     client latency/availability models (distributions, dropout,
+                 persistent heterogeneous speeds)
+  scheduler.py   event-driven simulated-time scheduler (bounded concurrency,
+                 deterministic per seed)
+  staleness.py   staleness-decay weight functions w(s)
+  buffer.py      FedBuff-style buffered server flush + staleness-aware
+                 FedPAC Alignment (AsyncConfig, jitted aggregate)
+  experiment.py  AsyncFederatedExperiment — drop-in FedExperiment
+"""
+from repro.fed.async_runtime.latency import LatencyModel
+from repro.fed.async_runtime.scheduler import SimScheduler, Completion
+from repro.fed.async_runtime.staleness import make_staleness_weight
+from repro.fed.async_runtime.buffer import AsyncConfig, make_async_aggregate_fn
+from repro.fed.async_runtime.experiment import AsyncFederatedExperiment

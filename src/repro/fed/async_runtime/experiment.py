@@ -1,0 +1,187 @@
+"""``AsyncFederatedExperiment`` — the buffered-asynchronous execution model
+for every (non-scaffold) algorithm the repo supports.
+
+Drop-in interchangeable with the synchronous ``FederatedExperiment`` via the
+shared ``fed.base.FedExperiment`` interface: one ``run_round()`` is one
+buffer flush (one server version).  Per client, local training runs at
+*dispatch* under the then-current server snapshot (params, Theta^v, g_G^v)
+— semantically the client downloaded version v — and the result is delivered
+by the simulated-time scheduler after the client's sampled latency, possibly
+several versions later.  Staleness-aware FedPAC then decays each arrival's
+delta and Theta by w(s_i) before Alignment/Correction (see buffer.py), and
+``beta="auto"`` additionally scales the correction strength by the buffer
+freshness rho so stale g_G estimates correct less.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import (
+    init_server, make_svd_codec, round_comm_bytes, zero_theta,
+)
+from repro.core.client import LocalRunConfig, client_round
+from repro.core.fedpac import BETA_MAX_AUTO
+from repro.core.server import ServerState
+from repro.fed.base import FedExperiment
+from repro.fed.rounds import (
+    FedConfig, parse_algorithm, resolve_beta, resolve_lr,
+)
+from repro.fed.staging import stage_client_batches
+from repro.fed.async_runtime.buffer import AsyncConfig, make_async_aggregate_fn
+from repro.fed.async_runtime.scheduler import SimScheduler
+from repro.fed.async_runtime.staleness import make_staleness_weight
+
+
+class AsyncFederatedExperiment(FedExperiment):
+    """Buffered-asynchronous federated runtime (FedBuff execution model)."""
+
+    def __init__(self, fed: FedConfig, params, loss_fn: Callable,
+                 client_batch_fn: Callable, eval_fn: Optional[Callable] = None,
+                 opt_kwargs: Optional[dict] = None,
+                 async_cfg: Optional[AsyncConfig] = None):
+        self.fed = fed
+        self.acfg = async_cfg or AsyncConfig()
+        self.loss_fn = loss_fn
+        self.client_batch_fn = client_batch_fn
+        self.eval_fn = eval_fn
+
+        opt_name, align, correct, light = parse_algorithm(fed.algorithm)
+        if opt_name == "scaffold":
+            raise ValueError(
+                "scaffold needs lock-step persistent control variates; "
+                "use the synchronous runtime")
+        self.opt = optim.make(opt_name, **(opt_kwargs or {}))
+        self.align = align
+        lr = resolve_lr(fed, opt_name)
+        self.lr = lr
+
+        beta, self._adaptive = resolve_beta(fed, correct)
+        self._beta = beta
+        self._beta_max = BETA_MAX_AUTO
+
+        run = LocalRunConfig(lr=lr, local_steps=fed.local_steps, beta=beta,
+                             hessian_freq=fed.hessian_freq, align=align)
+
+        def local_fn(p, theta, g, batches, key, beta_in):
+            return client_round(loss_fn, self.opt, run, p, theta, g,
+                                batches, key, beta=beta_in)
+
+        self._local_fn = jax.jit(local_fn)
+        self._flush_fn = make_async_aggregate_fn(
+            lr=lr, local_steps=fed.local_steps, server_lr=fed.server_lr)
+        self._codec = make_svd_codec(fed.svd_rank) if light else None
+        self._weight_fn = make_staleness_weight(
+            self.acfg.staleness_mode, self.acfg.staleness_alpha,
+            self.acfg.hinge_threshold)
+
+        self.server = init_server(params, self.opt)
+        self._theta0 = zero_theta(self.opt, params)
+        concurrency = self.acfg.resolve_concurrency(fed.n_clients,
+                                                    fed.participation)
+        self.scheduler = SimScheduler(self.acfg.latency, fed.n_clients,
+                                      concurrency, seed=fed.seed)
+        # batches/keys draw from a separate stream so the simulated event
+        # order is invariant to how many batch samples a client consumes.
+        self.rng = np.random.default_rng(fed.seed + 1)
+        self.history: list[dict] = []
+        self.total_dropped = 0
+        self.total_discarded = 0
+
+    # ------------------------------------------------------------ clients
+
+    def _client_payload(self, cid: int):
+        """Train client ``cid`` on the current server snapshot (dispatch)."""
+        batches = stage_client_batches(self.client_batch_fn, cid,
+                                       self.fed.local_steps, self.rng)
+        key = jax.random.key(int(self.rng.integers(0, 2**31)))
+        theta = self.server.theta if self.server.theta is not None \
+            else self._theta0
+        delta, theta_out, loss = self._local_fn(
+            self.server.params, theta, self.server.g_global, batches, key,
+            jnp.float32(self._beta))
+        return {"delta": delta, "theta": theta_out, "loss": loss}
+
+    # ------------------------------------------------------------ loop
+
+    def run_round(self):
+        """Collect ``buffer_size`` usable client reports, then flush."""
+        acf, sched = self.acfg, self.scheduler
+        version = self.server.round
+        sched.fill(version, self._client_payload)
+        buffered, stale, weights = [], [], []
+        dropped = discarded = 0
+        events_budget = 100 * acf.buffer_size + 100
+        while len(buffered) < acf.buffer_size:
+            events_budget -= 1
+            if events_budget <= 0:
+                raise RuntimeError(
+                    "buffer starved: dropout/max_staleness reject every "
+                    "arrival — loosen AsyncConfig")
+            ev = sched.next_completion()
+            # replacement trains from the *current* server state
+            sched.fill(version, self._client_payload)
+            if ev.dropped:
+                dropped += 1
+                continue
+            s = version - ev.version
+            if acf.max_staleness is not None and s > acf.max_staleness:
+                discarded += 1
+                continue
+            buffered.append(ev)
+            stale.append(s)
+            weights.append(self._weight_fn(s))
+
+        deltas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[ev.payload["delta"] for ev in buffered])
+        thetas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[ev.payload["theta"] for ev in buffered])
+        if self._codec is not None:
+            thetas = self._codec(thetas)
+        w = jnp.asarray(weights, jnp.float32)
+        theta_ref = self.server.theta if self.server.theta is not None \
+            else self._theta0
+        p, th, g, metrics = self._flush_fn(
+            self.server.params, theta_ref, self.server.g_global,
+            deltas, thetas, w)
+        self.server = ServerState(p, th, g, version + 1, version + 1)
+
+        if self._adaptive:
+            d = float(metrics["norm_drift"])
+            rho = float(metrics["freshness"])
+            # drift-adaptive rule, additionally backed off by staleness of
+            # the g_G estimate the next cohort will correct toward
+            self._beta = self._beta_max * d / (1.0 + d) * rho
+
+        self.total_dropped += dropped
+        self.total_discarded += discarded
+        rec = {k: float(v) for k, v in metrics.items()}
+        rec.update({
+            "loss": float(np.mean([float(ev.payload["loss"])
+                                   for ev in buffered])),
+            "beta": float(self._beta),
+            "staleness": float(np.mean(stale)),
+            "max_staleness": float(np.max(stale)),
+            "sim_time": float(sched.now),
+            "dropped": float(dropped),
+            "discarded": float(discarded),
+        })
+        rec["round"] = self.server.round
+        if self.eval_fn is not None:
+            rec.update({k: float(v) for k, v in
+                        self.eval_fn(self.server.params).items()})
+        self.history.append(rec)
+        return rec
+
+    # ------------------------------------------------------------ accounting
+
+    def comm_bytes_per_round(self) -> int:
+        theta = self.server.theta if self.align else None
+        _, _, _, light = parse_algorithm(self.fed.algorithm)
+        return round_comm_bytes(
+            self.server.params, theta,
+            compressed_rank=self.fed.svd_rank if light else None)

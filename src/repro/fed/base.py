@@ -1,0 +1,55 @@
+"""Shared federated-experiment interface.
+
+``FedExperiment`` is the runtime-agnostic contract that both the lock-step
+synchronous runtime (``fed.rounds.FederatedExperiment``) and the buffered
+asynchronous runtime (``fed.async_runtime.AsyncFederatedExperiment``)
+implement, so benchmarks and examples can swap execution models without
+touching algorithm code.  One ``run_round()`` is one server model update —
+a communication round in the sync runtime, a buffer flush in the async one.
+
+``make_experiment`` picks the runtime from ``FedConfig.runtime``.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Optional
+
+
+class FedExperiment(abc.ABC):
+    """Drives server model updates for any algorithm over client datasets."""
+
+    history: list
+
+    @abc.abstractmethod
+    def run_round(self) -> dict:
+        """Advance the server by one model update; returns the metrics row."""
+
+    @abc.abstractmethod
+    def comm_bytes_per_round(self) -> int:
+        """Per-client upload bytes for one round (Table 6 accounting)."""
+
+    def run(self, rounds: Optional[int] = None, log_every: int = 0):
+        for r in range(rounds if rounds is not None else self.fed.rounds):
+            rec = self.run_round()
+            if log_every and (r % log_every == 0):
+                print({k: round(v, 4) for k, v in rec.items()})
+        return self.history
+
+
+def make_experiment(fed, params, loss_fn, client_batch_fn, eval_fn=None,
+                    opt_kwargs=None, async_cfg=None) -> FedExperiment:
+    """Instantiate the runtime named by ``fed.runtime`` ("sync" | "async")."""
+    if fed.runtime == "sync":
+        if async_cfg is not None:
+            raise ValueError(
+                "async_cfg given but fed.runtime='sync' — set "
+                "FedConfig(runtime='async') or drop the async_cfg")
+        from repro.fed.rounds import FederatedExperiment
+        return FederatedExperiment(fed, params, loss_fn, client_batch_fn,
+                                   eval_fn, opt_kwargs)
+    if fed.runtime == "async":
+        from repro.fed.async_runtime import AsyncFederatedExperiment
+        return AsyncFederatedExperiment(fed, params, loss_fn, client_batch_fn,
+                                        eval_fn, opt_kwargs,
+                                        async_cfg=async_cfg)
+    raise ValueError(f"unknown runtime {fed.runtime!r} (want 'sync'|'async')")

@@ -1,4 +1,4 @@
-"""Federated experiment runtime: client sampling, batch staging, round loop.
+"""Synchronous federated runtime: client sampling, batch staging, round loop.
 
 Supports every algorithm in the paper's tables:
   fedavg                         SGD locally, parameter averaging
@@ -7,11 +7,14 @@ Supports every algorithm in the paper's tables:
   local_{adamw,sophia,muon,soap} FedSOA (Alg. 1) with that optimizer
   fedpac_{sophia,muon,soap}      FedPAC (Alg. 2)
   + component ablations (align_only / correct_only) and _light (SVD upload)
+
+The buffered-asynchronous execution model of the same algorithms lives in
+``fed.async_runtime``; both implement ``fed.base.FedExperiment``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import numpy as np
 import jax
@@ -22,7 +25,9 @@ from repro.core import (
     make_round_fn, init_server, make_svd_codec, round_comm_bytes,
 )
 from repro.core.server import ServerState
+from repro.fed.base import FedExperiment
 from repro.fed.scaffold import make_scaffold_round_fn, ScaffoldState
+from repro.fed.staging import stage_cohort_batches
 
 
 @dataclasses.dataclass
@@ -34,11 +39,12 @@ class FedConfig:
     local_steps: int = 10          # K
     batch_size: int = 16
     lr: Optional[float] = None     # default: paper's per-optimizer lr
-    beta: float = 0.5              # FedPAC correction strength
+    beta: Union[float, str] = 0.5  # FedPAC correction strength (or "auto")
     hessian_freq: int = 10
     svd_rank: int = 8              # for *_light variants
     seed: int = 0
     server_lr: float = 1.0
+    runtime: str = "sync"          # "sync" | "async" (fed.base.make_experiment)
 
 
 def parse_algorithm(name: str):
@@ -64,8 +70,29 @@ def parse_algorithm(name: str):
     raise ValueError(name)
 
 
-class FederatedExperiment:
-    """Drives R communication rounds of any algorithm over client datasets.
+def resolve_lr(fed: FedConfig, opt_name: str) -> float:
+    """Explicit fed.lr wins — including falsy values like 0.0."""
+    if fed.lr is not None:
+        return fed.lr
+    return optim.DEFAULT_LR.get(opt_name, 1e-2)
+
+
+def resolve_beta(fed: FedConfig, correct: bool):
+    """-> (static_beta, adaptive): the one beta rule for both runtimes.
+
+    No correction => 0; FedCM pins beta to its (1 - alpha) = 0.9;
+    beta="auto" starts at 0 and is driven by measured drift each round."""
+    if not correct:
+        return 0.0, False
+    if fed.algorithm == "fedcm":
+        return 0.9, False
+    if fed.beta == "auto":
+        return 0.0, True
+    return float(fed.beta), False
+
+
+class FederatedExperiment(FedExperiment):
+    """Drives R lock-step communication rounds over client datasets.
 
     ``client_batch_fn(client_id, rng) -> batch pytree`` supplies one local
     minibatch; batches for a round are stacked to (S, K, ...).
@@ -82,7 +109,7 @@ class FederatedExperiment:
 
         opt_name, align, correct, light = parse_algorithm(fed.algorithm)
         self.is_scaffold = opt_name == "scaffold"
-        lr = fed.lr or optim.DEFAULT_LR.get(opt_name, 1e-2)
+        lr = resolve_lr(fed, opt_name)
         self.lr = lr
         if self.is_scaffold:
             self.opt = optim.make("sgd")
@@ -92,9 +119,8 @@ class FederatedExperiment:
             self.scaffold_state = ScaffoldState.init(params, fed.n_clients)
         else:
             self.opt = optim.make(opt_name, **(opt_kwargs or {}))
-            beta = fed.beta if correct else 0.0
-            if fed.algorithm == "fedcm":
-                beta = 0.9  # FedCM's (1 - alpha)
+            static_beta, adaptive = resolve_beta(fed, correct)
+            beta = "auto" if adaptive else static_beta
             codec = make_svd_codec(fed.svd_rank) if light else None
             self.round_fn = make_round_fn(
                 loss_fn, self.opt, lr=lr, local_steps=fed.local_steps,
@@ -113,13 +139,8 @@ class FederatedExperiment:
 
     def _stage_batches(self, cohort):
         """Stack per-client, per-step batches -> leading (S, K, ...) axes."""
-        per_client = []
-        for cid in cohort:
-            steps = [self.client_batch_fn(int(cid), self.rng)
-                     for _ in range(self.fed.local_steps)]
-            per_client.append(jax.tree.map(
-                lambda *xs: jnp.stack(xs), *steps))
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+        return stage_cohort_batches(self.client_batch_fn, cohort,
+                                    self.fed.local_steps, self.rng)
 
     # ------------------------------------------------------------ loop
 
@@ -140,13 +161,6 @@ class FederatedExperiment:
                         self.eval_fn(self.server.params).items()})
         self.history.append(rec)
         return rec
-
-    def run(self, rounds: Optional[int] = None, log_every: int = 0):
-        for r in range(rounds or self.fed.rounds):
-            rec = self.run_round()
-            if log_every and (r % log_every == 0):
-                print({k: round(v, 4) for k, v in rec.items()})
-        return self.history
 
     # ------------------------------------------------------------ accounting
 

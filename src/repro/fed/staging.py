@@ -1,0 +1,46 @@
+"""Batch staging shared by the sync and async runtimes.
+
+``client_batch_fn(cid, rng)`` yields one local minibatch; staging stacks the
+K per-step batches (and, for a synchronous cohort, the S clients) into
+leading (S, K, ...) axes with as few device transfers as possible:
+
+  * batch fn yields host (numpy) arrays -> stack entirely on host with
+    ``np.stack`` and do a *single* device transfer per leaf;
+  * batch fn yields device (jax) arrays -> stack on device with
+    ``jnp.stack``; pulling them back to host first would add S*K
+    device-to-host copies just to save the stack.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _stacker(tree):
+    """np.stack when every leaf is host-side, else jnp.stack."""
+    on_host = all(isinstance(leaf, np.ndarray) or np.isscalar(leaf)
+                  for leaf in jax.tree.leaves(tree))
+    return np.stack if on_host else jnp.stack
+
+
+def _stack_steps(client_batch_fn, cid: int, local_steps: int, rng):
+    """One client's K per-step batches stacked to a (K, ...) pytree."""
+    steps = [client_batch_fn(int(cid), rng) for _ in range(local_steps)]
+    stack = _stacker(steps[0])
+    return jax.tree.map(lambda *xs: stack(xs), *steps)
+
+
+def stage_client_batches(client_batch_fn, cid: int, local_steps: int, rng):
+    """One client's round of batches, stacked to leading (K, ...) axes."""
+    return jax.tree.map(
+        jnp.asarray, _stack_steps(client_batch_fn, cid, local_steps, rng))
+
+
+def stage_cohort_batches(client_batch_fn, cohort, local_steps: int, rng):
+    """A cohort's batches, stacked to leading (S, K, ...) axes."""
+    per_client = [_stack_steps(client_batch_fn, cid, local_steps, rng)
+                  for cid in cohort]
+    stack = _stacker(per_client[0])
+    stacked = jax.tree.map(lambda *xs: stack(xs), *per_client)
+    return jax.tree.map(jnp.asarray, stacked)

@@ -1,0 +1,216 @@
+"""Asynchronous federated runtime: deterministic simulated-time scheduling,
+staleness weights, buffered aggregation, and end-to-end algorithm runs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import aggregate_round, init_server
+from repro.data import make_image_classification, dirichlet_partition
+from repro.models.vision import init_cnn, cnn_apply, classification_loss
+from repro.fed import (
+    AsyncConfig, AsyncFederatedExperiment, FedConfig, FederatedExperiment,
+    LatencyModel, make_experiment, stage_cohort_batches,
+)
+from repro.fed.rounds import resolve_lr
+from repro.fed.async_runtime import SimScheduler, make_staleness_weight
+
+N_CLIENTS = 6
+
+
+@pytest.fixture(scope="module")
+def problem():
+    X, y = make_image_classification(600, image_size=8, n_classes=4, seed=0,
+                                     noise=1.0)
+    parts = dirichlet_partition(y, N_CLIENTS, 0.2, seed=0)
+    params = init_cnn(jax.random.key(0), n_classes=4, width=4, blocks=1)
+
+    def loss_fn(p, batch):
+        return classification_loss(cnn_apply(p, batch["x"]), batch["y"])
+
+    def batch_fn(cid, rng):
+        idx = rng.choice(parts[cid], size=4)
+        return {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return params, loss_fn, batch_fn
+
+
+def _async_cfg(**kw):
+    defaults = dict(buffer_size=2, concurrency=4,
+                    latency=LatencyModel(heterogeneity=1.0, jitter=0.5))
+    defaults.update(kw)
+    return AsyncConfig(**defaults)
+
+
+# ---------------------------------------------------------------- scheduler
+
+def _trace(seed, versions=20):
+    lat = LatencyModel(heterogeneity=1.0, jitter=0.5, dropout=0.2)
+    sched = SimScheduler(lat, n_clients=8, concurrency=4, seed=seed)
+    sched.fill(0)
+    out = []
+    for v in range(1, versions):
+        ev = sched.next_completion()
+        out.append((float(ev.time), ev.seq, ev.client_id, ev.version,
+                    ev.dropped))
+        sched.fill(v)  # replacements dispatched at the new version
+    return out
+
+
+def test_scheduler_event_order_deterministic():
+    a, b = _trace(seed=7), _trace(seed=7)
+    assert a == b                      # bit-identical replay per seed
+    assert a != _trace(seed=8)         # and seed actually matters
+    times = [t for t, *_ in a]
+    assert times == sorted(times)      # simulated clock is monotone
+    assert all(s >= 0 for _, s, *_ in a)
+
+
+def test_scheduler_bounded_concurrency():
+    lat = LatencyModel()
+    sched = SimScheduler(lat, n_clients=5, concurrency=3, seed=0)
+    sched.fill(0)
+    assert sched.in_flight() == 3
+    sched.next_completion()
+    assert sched.in_flight() == 2
+    sched.fill(1)
+    assert sched.in_flight() == 3
+    with pytest.raises(ValueError):
+        SimScheduler(lat, n_clients=2, concurrency=4, seed=0)
+
+
+def test_scheduler_staleness_and_weights():
+    """Versions lag behind for clients dispatched before a flush, and the
+    polynomial decay weights match 1/(1+s)^alpha exactly."""
+    trace = _trace(seed=3, versions=30)
+    weight = make_staleness_weight("poly", alpha=0.5)
+    staleness = []
+    for i, (_, _, _, dispatched_at, _) in enumerate(trace):
+        now = i + 1  # version at delivery (one flush per delivery in _trace)
+        s = now - dispatched_at - 1
+        assert s >= 0
+        staleness.append(s)
+        assert weight(s) == pytest.approx((1.0 + s) ** -0.5)
+        assert 0.0 < weight(s) <= 1.0
+    assert max(staleness) > 0  # concurrency > buffer => stale arrivals exist
+
+
+def test_staleness_weight_modes():
+    poly = make_staleness_weight("poly", alpha=0.5)
+    assert poly(0) == 1.0
+    assert poly(3) == pytest.approx(0.5)
+    const = make_staleness_weight("none")
+    assert const(9) == 1.0
+    hinge = make_staleness_weight("hinge", hinge_threshold=2)
+    assert hinge(2) == 1.0
+    assert hinge(4) == pytest.approx(1.0 / 3.0)
+    with pytest.raises(ValueError):
+        make_staleness_weight("bogus")
+
+
+# ---------------------------------------------------------------- aggregation
+
+def test_weighted_aggregate_reduces_to_mean():
+    params = {"w": jnp.ones((4, 4))}
+    opt = optim.make("sgd")
+    server = init_server(params, opt)
+    deltas = {"w": jnp.stack([jnp.full((4, 4), 1.0), jnp.full((4, 4), 3.0)])}
+    uniform = aggregate_round(server, deltas, None, lr=0.1, local_steps=2)
+    ones = aggregate_round(server, deltas, None, lr=0.1, local_steps=2,
+                           weights=jnp.ones(2))
+    np.testing.assert_allclose(uniform.params["w"], ones.params["w"])
+    # w=0.5 shrinks the step by half (unnormalized FedBuff semantics)
+    half = aggregate_round(server, deltas, None, lr=0.1, local_steps=2,
+                           weights=jnp.full(2, 0.5))
+    np.testing.assert_allclose(half.params["w"] - server.params["w"],
+                               (ones.params["w"] - server.params["w"]) / 2)
+    assert ones.round == 1 and ones.theta_version == server.theta_version
+
+
+# ---------------------------------------------------------------- end-to-end
+
+@pytest.mark.parametrize("algo", ["fedavg", "local_sophia", "fedpac_soap"])
+def test_async_runs_algorithms(problem, algo):
+    params, loss_fn, batch_fn = problem
+    fed = FedConfig(algorithm=algo, n_clients=N_CLIENTS, participation=0.5,
+                    rounds=3, local_steps=3, runtime="async")
+    exp = AsyncFederatedExperiment(fed, params, loss_fn, batch_fn,
+                                   async_cfg=_async_cfg())
+    hist = exp.run()
+    assert len(hist) == 3
+    assert np.isfinite(hist[-1]["loss"])
+    assert hist[-1]["round"] == 3
+    assert all(h["staleness"] >= 0.0 for h in hist)
+    assert exp.comm_bytes_per_round() > 0
+
+
+def test_async_staleness_surfaces_in_metrics(problem):
+    params, loss_fn, batch_fn = problem
+    fed = FedConfig(algorithm="fedavg", n_clients=N_CLIENTS,
+                    participation=1.0, rounds=4, local_steps=2,
+                    runtime="async")
+    exp = AsyncFederatedExperiment(
+        fed, params, loss_fn, batch_fn,
+        async_cfg=_async_cfg(buffer_size=2, concurrency=6))
+    hist = exp.run()
+    # concurrency > buffer: later flushes must see stale arrivals, and the
+    # poly decay must push freshness below 1
+    assert max(h["staleness"] for h in hist) > 0.0
+    assert min(h["freshness"] for h in hist) < 1.0
+
+
+def test_async_run_reproducible(problem):
+    params, loss_fn, batch_fn = problem
+    def go():
+        fed = FedConfig(algorithm="fedpac_soap", n_clients=N_CLIENTS,
+                        participation=0.5, rounds=3, local_steps=2, seed=11,
+                        runtime="async")
+        exp = AsyncFederatedExperiment(fed, params, loss_fn, batch_fn,
+                                       async_cfg=_async_cfg())
+        return exp.run()
+    a, b = go(), go()
+    assert [h["loss"] for h in a] == [h["loss"] for h in b]
+    assert [h["staleness"] for h in a] == [h["staleness"] for h in b]
+
+
+def test_async_rejects_scaffold(problem):
+    params, loss_fn, batch_fn = problem
+    fed = FedConfig(algorithm="scaffold", n_clients=N_CLIENTS)
+    with pytest.raises(ValueError):
+        AsyncFederatedExperiment(fed, params, loss_fn, batch_fn)
+
+
+def test_make_experiment_dispatch(problem):
+    params, loss_fn, batch_fn = problem
+    fed = FedConfig(algorithm="fedavg", n_clients=N_CLIENTS, rounds=1)
+    assert isinstance(make_experiment(fed, params, loss_fn, batch_fn),
+                      FederatedExperiment)
+    fed_async = FedConfig(algorithm="fedavg", n_clients=N_CLIENTS, rounds=1,
+                          runtime="async")
+    assert isinstance(make_experiment(fed_async, params, loss_fn, batch_fn),
+                      AsyncFederatedExperiment)
+    with pytest.raises(ValueError):
+        make_experiment(FedConfig(runtime="bogus"), params, loss_fn, batch_fn)
+
+
+# ---------------------------------------------------------------- satellites
+
+def test_explicit_lr_zero_not_discarded(problem):
+    params, loss_fn, batch_fn = problem
+    fed = FedConfig(algorithm="fedavg", n_clients=N_CLIENTS, lr=0.0)
+    exp = FederatedExperiment(fed, params, loss_fn, batch_fn)
+    assert exp.lr == 0.0
+    assert resolve_lr(FedConfig(lr=None), "sgd") == optim.DEFAULT_LR["sgd"]
+    assert resolve_lr(FedConfig(lr=0.0), "sgd") == 0.0
+
+
+def test_stage_cohort_batches_single_stack():
+    def batch_fn(cid, rng):
+        return {"x": np.full((3, 2), float(cid)), "y": np.arange(3)}
+    rng = np.random.default_rng(0)
+    out = stage_cohort_batches(batch_fn, [1, 4], local_steps=5, rng=rng)
+    assert out["x"].shape == (2, 5, 3, 2)
+    assert out["y"].shape == (2, 5, 3)
+    assert isinstance(out["x"], jax.Array)
+    np.testing.assert_allclose(np.asarray(out["x"][1]), 4.0)

@@ -1,6 +1,8 @@
 """Property tests: Dirichlet partitioner and divisibility-safe sharding."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax
