@@ -1,0 +1,70 @@
+"""Cohort-executor scaling sweep: vmap vs shard_map vs chunked round latency.
+
+Times one jitted FedPAC round per (backend, cohort size S) on a small
+vision problem — the speed/scale trade-off behind
+``core.engine.executors``:
+
+  vmap       fastest when the cohort fits one device;
+  shard_map  shards clients over the mesh's data axes (linear speedup in S
+             on multi-device meshes; on one CPU device it measures the
+             shard_map overhead floor);
+  chunked    bounded peak memory, wall clock ~ S/chunk_size sequential
+             steps — the only backend that runs when S outgrows the device.
+
+Emits ``exec_<backend>_S<cohort>`` rows (us per round).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core.engine import ExecutorConfig
+from repro.fed import FedConfig, FederatedExperiment
+from benchmarks.common import emit, make_fed_vision_problem
+
+BACKEND_CFGS = {
+    "vmap": dict(executor="vmap"),
+    "shard_map": dict(executor="shard_map"),
+    "chunked": dict(executor="chunked", chunk_size=4),
+}
+
+
+def _time_round(exp, iters=3):
+    exp.run_round()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        exp.run_round()
+    jax.block_until_ready(exp.server.params)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = True):
+    cohorts = [4, 8] if quick else [4, 8, 16, 32]
+    n_clients = max(cohorts)
+    params, loss_fn, batch_fn, _ = make_fed_vision_problem(
+        model="cnn", n=600, image_size=8, n_classes=4,
+        n_clients=n_clients, alpha=0.3, batch=8)
+    results = {}
+    for backend, kw in BACKEND_CFGS.items():
+        for s in cohorts:
+            fed = FedConfig(algorithm="fedpac_soap", n_clients=n_clients,
+                            participation=s / n_clients, rounds=4,
+                            local_steps=2, **kw)
+            exp = FederatedExperiment(fed, params, loss_fn, batch_fn)
+            us = _time_round(exp)
+            results[(backend, s)] = (us, exp.history[-1]["loss"])
+            emit(f"exec_{backend}_S{s}", us,
+                 f"loss={exp.history[-1]['loss']:.4f}")
+    # cross-backend agreement on the final loss (same seed, same cohorts)
+    for s in cohorts:
+        losses = [results[(b, s)][1] for b in BACKEND_CFGS]
+        emit(f"exec_agree_S{s}", 0.0,
+             f"max_dev={max(losses) - min(losses):.2e}")
+    return results
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(quick=True)

@@ -3,7 +3,10 @@
 Self-contained (no orbax dependency): leaves are stored under
 '/'-joined tree paths, dtypes/shapes preserved exactly, atomic rename on
 write.  Covers params, optimizer states (incl. None-masked leaves), and the
-full federated ServerState (params + Theta + g_G + round counter).
+full federated ServerState — params + Theta + g_G + round counter +
+theta_version + the functional GeometryController (adaptive beta + drift
+EMA), so a restored adaptive-beta run continues from the saved controller
+state instead of resetting.
 """
 from __future__ import annotations
 
@@ -17,8 +20,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.server import ServerState
+from repro.core.engine import GeometryController
 
 _NONE_SENTINEL = "__none__"
+
+
+def _geom_to_meta(geom) -> Optional[dict]:
+    if geom is None:
+        return None
+    return {"beta": float(geom.beta), "drift_ema": float(geom.drift_ema),
+            "beta_max": float(geom.beta_max), "adaptive": bool(geom.adaptive),
+            "ema": float(geom.ema)}
+
+
+def _geom_from_meta(meta: Optional[dict]):
+    if meta is None:
+        return None
+    return GeometryController(
+        jnp.float32(meta["beta"]), jnp.float32(meta["drift_ema"]),
+        beta_max=meta["beta_max"], adaptive=meta["adaptive"],
+        ema=meta["ema"])
 
 
 def _flatten(tree):
@@ -95,7 +116,8 @@ def save_server_state(server: ServerState, directory: str, step: int):
     with open(os.path.join(d, "meta.json"), "w") as f:
         json.dump({"round": server.round,
                    "theta_version": server.theta_version,
-                   "has_theta": server.theta is not None}, f)
+                   "has_theta": server.theta is not None,
+                   "geom": _geom_to_meta(server.geom)}, f)
 
 
 def load_server_state(template: ServerState, directory: str,
@@ -110,8 +132,14 @@ def load_server_state(template: ServerState, directory: str,
     if meta["has_theta"] and template.theta is not None:
         theta = load_pytree(template.theta, os.path.join(d, "theta.npz"))
     # pre-theta_version checkpoints: Theta (if any) dates from the saved round
+    geom = _geom_from_meta(meta.get("geom"))
+    if geom is None:
+        # pre-geom checkpoints: keep the experiment's controller rather than
+        # clobbering it (restores must not leave ServerState.geom None when
+        # the running experiment has one)
+        geom = template.geom
     return ServerState(params, theta, gg, meta["round"],
-                       meta.get("theta_version", meta["round"]))
+                       meta.get("theta_version", meta["round"]), geom)
 
 
 def latest_step(directory: str) -> int:

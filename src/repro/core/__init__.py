@@ -1,8 +1,11 @@
 """FedPAC core: the paper's contribution as composable JAX modules."""
 from repro.core.client import LocalRunConfig, client_round, hutchinson_estimate
-from repro.core.server import (
-    ServerState, init_server, aggregate_round, weighted_client_mean,
-    normalized_client_mean,
+from repro.core.server import ServerState, init_server
+from repro.core.engine import (
+    AggregationConfig, BETA_MAX_AUTO, ExecutorConfig, GeometryController,
+    advance_server, aggregate, aggregate_round, auto_controller,
+    fixed_controller, make_cohort_executor, make_controller,
+    normalized_client_mean, update_controller, weighted_client_mean,
 )
 from repro.core.fedpac import make_round_fn, zero_theta
 from repro.core.fedsoa import make_fedsoa_round_fn, make_variant_round_fn, VARIANTS

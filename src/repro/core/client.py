@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim.api import LocalOptimizer
-from repro.utils.tree import tree_zeros_like
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,8 +66,8 @@ def client_round(
             est = jax.lax.cond(
                 gate,
                 lambda: hutchinson_estimate(loss_fn, x, batch, key),
-                lambda: tree_zeros_like(
-                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), x)),
+                lambda: jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), x),
             )
             extras = {"h_est": est, "h_gate": gate}
         direction, st = opt.update(grads, st, x, k, extras)

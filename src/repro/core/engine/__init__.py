@@ -1,0 +1,23 @@
+"""Unified round engine: the one implementation of a communication round.
+
+Layering (top to bottom):
+
+  runtimes     fed.rounds (sync) / fed.async_runtime (buffered async) —
+               thin drivers: sample cohorts, stage batches, manage state
+  engine       aggregation.py  one ``aggregate`` for every server update
+               geometry.py     functional GeometryController (adaptive beta)
+               executors.py    vmap | shard_map | chunked cohort execution
+  optimizers   optim.* behind the (Theta, P_Theta) LocalOptimizer API
+  kernels      Pallas TPU kernels for the second-order hot paths
+"""
+from repro.core.engine.aggregation import (
+    AggregationConfig, aggregate, aggregate_round, advance_server,
+    weighted_client_mean, normalized_client_mean,
+)
+from repro.core.engine.geometry import (
+    BETA_MAX_AUTO, GeometryController, auto_controller, fixed_controller,
+    make_controller, update_controller,
+)
+from repro.core.engine.executors import (
+    BACKENDS, ExecutorConfig, make_cohort_executor,
+)

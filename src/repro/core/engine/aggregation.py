@@ -1,0 +1,151 @@
+"""The single server-side aggregation core (Alg. 2 lines 14-17).
+
+Every communication-round implementation in the repo — the synchronous
+round fn (``core.fedpac``), SCAFFOLD (``fed.scaffold``), the
+buffered-asynchronous flush (``fed.async_runtime.buffer``), and the
+launch-layer lowering step (``launch.steps``) — funnels through
+``aggregate``.  One code path means one set of semantics:
+
+  params  x' = x + server_lr * (1/B) sum_i w_i Delta_i
+          (unnormalized FedBuff step: a stale buffer moves the model less;
+          w_i = 1 recovers the paper's synchronous uniform mean bitwise)
+  g_G     g_B = -(sum_i w_i Delta_i / sum_i w_i) / (K eta),
+          g' = (1 - rho) g + rho g_B,            rho = mean_i w_i
+  Theta   Theta_B = sum_i w_i Theta_i / sum_i w_i,
+          Theta' = (1 - rho) Theta + rho Theta_B   (only when cfg.align)
+
+rho (the cohort "freshness") is 1 for a synchronous round, so the
+freshness mixing degenerates to full replacement and a zero-staleness
+buffer flush is *bitwise* identical to a synchronous round — the
+equivalence the async runtime's correctness rests on (tested in
+``tests/test_engine.py``).
+
+Cohort results arrive stacked on a leading client axis; on the production
+mesh that axis is sharded over ("pod","data") (see ``engine.executors``),
+so every mean here lowers to an all-reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.drift import drift_metric
+from repro.core.server import ServerState
+from repro.utils.tree import tree_norm_sq
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationConfig:
+    """Static knobs of one server update (hashable: safe to close over)."""
+    lr: float                  # client learning rate eta
+    local_steps: int           # K
+    server_lr: float = 1.0
+    align: bool = True         # update the global Theta reference?
+
+
+def weighted_client_mean(tree, weights=None):
+    """Mean over the leading client axis; optionally w_i-scaled (FedBuff).
+
+    With weights, returns (1/S) sum_i w_i x_i — unnormalized on purpose:
+    w_i in (0,1] shrink the contribution of stale clients rather than
+    re-normalizing it away, so a fully-stale buffer takes a smaller server
+    step.  weights=None is the uniform mean (w_i = 1).
+    """
+    if weights is None:
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+    w = weights.astype(jnp.float32)
+    return jax.tree.map(
+        lambda x: jnp.mean(
+            w.reshape((-1,) + (1,) * (x.ndim - 1)) * x.astype(jnp.float32),
+            axis=0),
+        tree)
+
+
+def normalized_client_mean(tree, weights):
+    """sum_i w_i x_i / sum_i w_i over the leading client axis."""
+    w = weights.astype(jnp.float32)
+    denom = jnp.sum(w) + 1e-12
+    return jax.tree.map(
+        lambda x: jnp.sum(
+            w.reshape((-1,) + (1,) * (x.ndim - 1)) * x.astype(jnp.float32),
+            axis=0) / denom,
+        tree)
+
+
+def aggregate(params, theta, g_global, deltas, thetas, weights,
+              cfg: AggregationConfig):
+    """One server update from a stacked cohort.
+
+    deltas: pytree with leading (B,) client axis; thetas: same, or None for
+    first-order algorithms (no geometry to aggregate — drift reports 0).
+    weights: (B,) per-client weights; jnp.ones for a synchronous round.
+    Returns (new_params, new_theta, new_g, metrics).
+    """
+    w = weights.astype(jnp.float32)
+    rho = jnp.mean(w)                       # cohort freshness in (0, 1]
+    step = weighted_client_mean(deltas, w)  # (1/B) sum_i w_i Delta_i
+    new_params = jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32)
+                      + cfg.server_lr * d).astype(p.dtype), params, step)
+    # g_G estimate is w-normalized — only the parameter *step* shrinks with
+    # staleness, not the magnitude of the direction (Alg. 2 line 14).
+    g_batch = jax.tree.map(
+        lambda d: -d / (cfg.local_steps * cfg.lr),
+        normalized_client_mean(deltas, w))
+    new_g = jax.tree.map(lambda old, gb: (1.0 - rho) * old + rho * gb,
+                         g_global, g_batch)
+
+    if thetas is None:
+        new_theta = theta
+        drift = jnp.zeros((), jnp.float32)
+        norm_drift = jnp.zeros((), jnp.float32)
+    else:
+        drift = drift_metric(thetas)
+        theta_batch = normalized_client_mean(thetas, w)
+        norm_drift = drift / (tree_norm_sq(theta_batch) + 1e-12)
+        if cfg.align:
+            # Theta is a reference geometry, not a step: freshness-mixed so
+            # a stale buffer drags the global geometry only part-way.
+            old = theta if theta is not None else jax.tree.map(
+                jnp.zeros_like, theta_batch)
+            new_theta = jax.tree.map(
+                lambda o, tb: ((1.0 - rho) * o.astype(jnp.float32)
+                               + rho * tb).astype(o.dtype),
+                old, theta_batch)
+        else:
+            new_theta = theta
+    metrics = {"drift": drift, "norm_drift": norm_drift, "freshness": rho}
+    return new_params, new_theta, new_g, metrics
+
+
+def advance_server(server: ServerState, params, theta, g_global, *,
+                   geom=None, aligned: bool) -> ServerState:
+    """Next ServerState: round += 1; theta_version stamped only when the
+    geometry reference actually refreshed (align=True rounds)."""
+    r = server.round + 1
+    return ServerState(params, theta, g_global, r,
+                       r if aligned else server.theta_version,
+                       geom if geom is not None else server.geom)
+
+
+def aggregate_round(server: ServerState, deltas, thetas, *, lr: float,
+                    local_steps: int, server_lr: float = 1.0,
+                    weights=None) -> ServerState:
+    """Core-level weighted entry point: one engine aggregate -> ServerState.
+
+    weights: optional (B,) per-client weights (e.g. staleness decay); None
+    is the synchronous uniform mean.  Passing thetas=None leaves the
+    geometry reference and its version untouched.
+    """
+    cfg = AggregationConfig(lr=lr, local_steps=local_steps,
+                            server_lr=server_lr, align=thetas is not None)
+    if weights is None:
+        weights = jnp.ones(
+            (jax.tree.leaves(deltas)[0].shape[0],), jnp.float32)
+    new_params, new_theta, new_g, _ = aggregate(
+        server.params, server.theta, server.g_global, deltas, thetas,
+        weights, cfg)
+    return advance_server(server, new_params, new_theta, new_g,
+                          aligned=thetas is not None)

@@ -1,0 +1,79 @@
+"""Functional geometry controller: adaptive correction strength as jit-pure
+state carried inside ``ServerState``.
+
+Replaces the old mutable ``beta_cell`` dict that lived Python-side in the
+sync driver: invisible to jit, lost on checkpoint restore, and necessarily
+divergent between the sync and async runtimes.  ``GeometryController`` is a
+registered pytree whose array leaves (beta, drift EMA) flow through jitted
+round functions and checkpoints, while its rule configuration (beta_max,
+adaptive, ema) is static metadata — changing it retraces, as it should.
+
+The drift-adaptive rule (beyond-paper; see EXPERIMENTS §Paper-claims):
+
+  d_r    = (1 - c) d_{r-1} + c * norm_drift_r      (EMA, c=1 => raw drift)
+  beta_r = beta_max * d_r / (1 + d_r) * freshness
+
+Thm 5.6's penalty is proportional to the drift Delta_D — when client
+geometries barely move apart, a fixed beta only injects staleness from
+g_G^{r-1}; the rule backs the correction off exactly then.  ``freshness``
+(the async buffer's rho) additionally scales beta down when the g_G estimate
+the next cohort corrects toward is itself stale; the sync runtime passes 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# cap for the drift-adaptive beta="auto" rule (both runtimes)
+BETA_MAX_AUTO = 0.7
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("beta", "drift_ema"),
+                   meta_fields=("beta_max", "adaptive", "ema"))
+@dataclasses.dataclass(frozen=True)
+class GeometryController:
+    beta: jax.Array                 # correction strength used next round
+    drift_ema: jax.Array            # smoothed normalized drift
+    beta_max: float = BETA_MAX_AUTO
+    adaptive: bool = False
+    ema: float = 1.0                # EMA coefficient; 1.0 = no smoothing
+
+
+def fixed_controller(beta: float) -> GeometryController:
+    """Constant-beta controller (fixed beta, FedCM, or no correction)."""
+    return GeometryController(jnp.float32(beta), jnp.float32(0.0))
+
+
+def auto_controller(beta_max: float = BETA_MAX_AUTO,
+                    ema: float = 1.0) -> GeometryController:
+    """Drift-adaptive controller; beta starts at 0 (no drift signal yet)."""
+    return GeometryController(jnp.float32(0.0), jnp.float32(0.0),
+                              beta_max=float(beta_max), adaptive=True,
+                              ema=float(ema))
+
+
+def update_controller(ctrl: GeometryController, norm_drift,
+                      freshness=1.0) -> GeometryController:
+    """One controller step (jit-pure). Fixed controllers pass through."""
+    if not ctrl.adaptive:
+        return ctrl
+    d = ((1.0 - ctrl.ema) * ctrl.drift_ema
+         + ctrl.ema * norm_drift).astype(jnp.float32)
+    beta = (ctrl.beta_max * d / (1.0 + d) * freshness).astype(jnp.float32)
+    return dataclasses.replace(ctrl, beta=beta, drift_ema=d)
+
+
+def make_controller(beta, *, correct: bool = True,
+                    beta_max: float = BETA_MAX_AUTO,
+                    ema: float = 1.0) -> GeometryController:
+    """The one beta rule for both runtimes: beta="auto" => adaptive;
+    correct=False => beta pinned to 0."""
+    if not correct:
+        return fixed_controller(0.0)
+    if beta == "auto":
+        return auto_controller(beta_max=beta_max, ema=ema)
+    return fixed_controller(float(beta))

@@ -6,21 +6,15 @@ Decouples parameter aggregation from geometry synchronization:
   Correction — local steps mix the locally preconditioned direction with the
                estimated global direction g_G^r (line 9, Eq. 9).
 
-``make_round_fn`` builds a single jitted function computing one communication
-round for a cohort of S clients (vmapped; shard the client axis over the mesh
-to realize the paper's linear speedup in S).
-
-Beyond-paper: ``beta="auto"`` scales the correction strength with the
-*measured normalized drift* of the previous round,
-  beta_r = beta_max * d / (1 + d),   d = Delta_D / (||Theta_mean||^2 + eps).
-Rationale: Thm 5.6's penalty is proportional to Delta_D — when clients'
-geometries barely drift (near-IID or curvature-homogeneous data), a fixed
-beta only injects staleness from g_G^{r-1}; adaptive beta backs the
-correction off exactly then (see EXPERIMENTS §Paper-claims analysis).
+``make_round_fn`` is a thin driver over the unified round engine
+(``core.engine``): the cohort runs under a pluggable executor (vmap |
+shard_map | chunked), the server update is the engine's single
+``aggregate``, and the drift-adaptive ``beta="auto"`` rule is the
+functional ``GeometryController`` carried in ``ServerState.geom`` — jit-
+pure, checkpointable, and identical across the sync and async runtimes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Union
 
 import jax
@@ -28,12 +22,11 @@ import jax.numpy as jnp
 
 from repro.core.client import LocalRunConfig, client_round
 from repro.core.server import ServerState
-from repro.core.drift import drift_metric
-from repro.utils.tree import tree_norm_sq
+from repro.core.engine import (
+    AggregationConfig, BETA_MAX_AUTO, ExecutorConfig, advance_server,
+    aggregate, make_cohort_executor, make_controller, update_controller,
+)
 from repro.optim.api import LocalOptimizer
-
-# cap for the drift-adaptive beta="auto" rule (both runtimes)
-BETA_MAX_AUTO = 0.7
 
 
 def make_round_fn(
@@ -49,6 +42,8 @@ def make_round_fn(
     server_lr: float = 1.0,
     compress_fn=None,       # FedPAC_light: Theta codec (see core.compression)
     beta_max: float = BETA_MAX_AUTO,  # cap for beta="auto"
+    drift_ema: float = 1.0,           # EMA coeff for beta="auto" (1 = raw)
+    executor: Optional[ExecutorConfig] = None,
     jit: bool = True,
 ):
     """Returns round_fn(server_state, batches, rng) -> (server_state, metrics).
@@ -56,56 +51,51 @@ def make_round_fn(
     batches: pytree with leading (S, K, ...) axes (client, local step).
     ``align=False, correct=False`` (or ``variant="fedsoa"`` upstream) is the
     naive FedSOA baseline of Alg. 1.  ``beta="auto"`` enables drift-adaptive
-    correction (beyond-paper; see module docstring).
+    correction (see ``core.engine.geometry``).
     """
-    adaptive = beta == "auto"
-    static_beta = 0.0 if (adaptive or not correct) else float(beta)
-    run = LocalRunConfig(lr=lr, local_steps=local_steps, beta=static_beta,
+    default_ctrl = make_controller(beta, correct=correct, beta_max=beta_max,
+                                   ema=drift_ema)
+    run = LocalRunConfig(lr=lr, local_steps=local_steps, beta=0.0,
                          hessian_freq=hessian_freq, align=align)
+    agg_cfg = AggregationConfig(lr=lr, local_steps=local_steps,
+                                server_lr=server_lr, align=align)
+    cohort = make_cohort_executor(executor)
 
-    def round_fn(params, theta, g_global, batches, rng, beta_in):
+    def round_fn(params, theta, g_global, ctrl, batches, rng):
         n_clients = jax.tree.leaves(batches)[0].shape[0]
         keys = jax.random.split(rng, n_clients)
 
         def one_client(batch_i, key_i):
             return client_round(loss_fn, opt, run, params, theta,
-                                g_global, batch_i, key_i, beta=beta_in)
+                                g_global, batch_i, key_i, beta=ctrl.beta)
 
-        deltas, thetas, losses = jax.vmap(one_client)(batches, keys)
+        deltas, thetas, losses = cohort(one_client, batches, keys)
         if compress_fn is not None:
             # Clients upload compressed Theta; server aggregates the decoded
             # reconstruction (accuracy/bandwidth trade-off of Table 6).
             thetas = compress_fn(thetas)
-        drift = drift_metric(thetas)
-        mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
-        new_params = jax.tree.map(
-            lambda p, d: (p.astype(jnp.float32)
-                          + server_lr * d).astype(p.dtype), params, mean_delta)
-        new_g = jax.tree.map(lambda d: -d / (local_steps * lr), mean_delta)
-        new_theta = jax.tree.map(lambda t: jnp.mean(t, axis=0), thetas)
-        theta_norm = tree_norm_sq(new_theta)
-        norm_drift = drift / (theta_norm + 1e-12)
-        metrics = {"loss": jnp.mean(losses), "drift": drift,
-                   "norm_drift": norm_drift, "beta": beta_in}
-        return new_params, new_theta, new_g, metrics
+        weights = jnp.ones((n_clients,), jnp.float32)
+        new_params, new_theta, new_g, agg = aggregate(
+            params, theta, g_global, deltas, thetas, weights, agg_cfg)
+        new_ctrl = update_controller(ctrl, agg["norm_drift"],
+                                     agg["freshness"])
+        metrics = dict(agg, loss=jnp.mean(losses), beta=ctrl.beta)
+        return new_params, new_theta, new_g, new_ctrl, metrics
 
     if jit:
         round_fn = jax.jit(round_fn)
 
-    beta_cell = {"value": jnp.float32(static_beta)}
-
     def driver(server: ServerState, batches, rng):
+        ctrl = server.geom if server.geom is not None else default_ctrl
         theta = server.theta
-        if theta is None:
+        if align and theta is None:
             # round 0: no reference yet -> align to the fresh (zero) state.
             theta = zero_theta(opt, server.params)
-        p, th, g, metrics = round_fn(server.params, theta, server.g_global,
-                                     batches, rng, beta_cell["value"])
-        if adaptive and correct:
-            d = metrics["norm_drift"]
-            beta_cell["value"] = (beta_max * d / (1.0 + d)).astype(jnp.float32)
-        return ServerState(p, th, g, server.round + 1, server.round + 1), \
-            metrics
+        p, th, g, ctrl, metrics = round_fn(server.params, theta,
+                                           server.g_global, ctrl, batches,
+                                           rng)
+        return advance_server(server, p, th, g, geom=ctrl,
+                              aligned=align), metrics
 
     return driver
 

@@ -1,18 +1,12 @@
-"""Server-side aggregation (Alg. 2 lines 14-17).
+"""Server state for the federated runtimes.
 
-Cohort results arrive stacked on a leading client axis (from vmap); on the
-production mesh that axis is sharded over ("pod","data"), so every mean here
-lowers to an all-reduce — the paper's server round-trip becomes a collective.
-
-Aggregation optionally takes per-client ``weights`` (leading-axis vector):
-None is the uniform mean (the paper's synchronous setting); staleness
-weights w_i in (0, 1] shrink stale clients' contributions.  The helpers
-``weighted_client_mean``/``normalized_client_mean`` are the shared building
-blocks — the buffered-asynchronous flush in ``fed.async_runtime.buffer``
-composes them with freshness mixing, while ``aggregate_round`` is the
-core-level weighted entry point.  ``ServerState.theta_version`` records the
-server round at which Theta was last refreshed so stale geometries can be
-dated against the version a client trained from.
+The aggregation math itself lives in ``core.engine.aggregation`` — the one
+implementation shared by the sync round fn, SCAFFOLD, and the async buffer
+flush.  ``ServerState.theta_version`` records the server round at which
+Theta was last refreshed so stale geometries can be dated against the
+version a client trained from; ``geom`` carries the functional
+``GeometryController`` (adaptive correction strength) so beta evolves
+inside jit and survives checkpoints.
 """
 from __future__ import annotations
 
@@ -30,67 +24,10 @@ class ServerState:
     g_global: Any       # estimated global direction g_G^r
     round: int = 0
     theta_version: int = 0   # round at which theta was last aggregated
+    geom: Any = None         # GeometryController (or None: fixed-beta legacy)
 
 
-def weighted_client_mean(tree, weights=None):
-    """Mean over the leading client axis; optionally w_i-scaled (FedBuff).
-
-    With weights, returns (1/S) sum_i w_i x_i — unnormalized on purpose:
-    w_i in (0,1] shrink the contribution of stale clients rather than
-    re-normalizing it away, so a fully-stale buffer takes a smaller server
-    step.  weights=None is the uniform mean (w_i = 1).
-    """
-    if weights is None:
-        return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
-    w = weights.astype(jnp.float32)
-    return jax.tree.map(
-        lambda x: jnp.mean(
-            w.reshape((-1,) + (1,) * (x.ndim - 1)) * x.astype(jnp.float32),
-            axis=0),
-        tree)
-
-
-def normalized_client_mean(tree, weights):
-    """sum_i w_i x_i / sum_i w_i over the leading client axis."""
-    w = weights.astype(jnp.float32)
-    denom = jnp.sum(w) + 1e-12
-    return jax.tree.map(
-        lambda x: jnp.sum(
-            w.reshape((-1,) + (1,) * (x.ndim - 1)) * x.astype(jnp.float32),
-            axis=0) / denom,
-        tree)
-
-
-def aggregate_round(server: ServerState, deltas, thetas, *, lr: float,
-                    local_steps: int, server_lr: float = 1.0,
-                    weights=None) -> ServerState:
-    """deltas/thetas: pytrees with leading client axis (stacked).
-
-    weights: optional (S,) per-client weights (e.g. staleness decay); None
-    is the synchronous uniform mean.
-    """
-    mean_delta = weighted_client_mean(deltas, weights)
-    new_params = jax.tree.map(
-        lambda p, d: (p.astype(jnp.float32) + server_lr * d).astype(p.dtype),
-        server.params, mean_delta)
-    # g_G^{r+1} = -(1/(S K eta)) sum_i Delta x_i  (Alg. 2 line 14).  Under
-    # weights the direction estimate is w-normalized — only the parameter
-    # *step* shrinks with staleness, not the magnitude of g_G (buffer.py
-    # makes the same distinction).
-    g_src = mean_delta if weights is None \
-        else normalized_client_mean(deltas, weights)
-    g_global = jax.tree.map(lambda d: -d / (local_steps * lr), g_src)
-    if thetas is not None:
-        # Theta is a reference geometry, not a step: always w-normalized
-        theta = weighted_client_mean(thetas, None) if weights is None \
-            else normalized_client_mean(thetas, weights)
-        theta_version = server.round + 1
-    else:
-        theta, theta_version = None, server.theta_version
-    return ServerState(new_params, theta, g_global, server.round + 1,
-                       theta_version)
-
-
-def init_server(params, opt, g_dtype=jnp.float32) -> ServerState:
+def init_server(params, opt, g_dtype=jnp.float32, geom=None) -> ServerState:
     g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, g_dtype), params)
-    return ServerState(params=params, theta=None, g_global=g0, round=0)
+    return ServerState(params=params, theta=None, g_global=g0, round=0,
+                       geom=geom)

@@ -3,20 +3,15 @@ FedPAC geometry handling.
 
 The server holds version v and a buffer; client results (delta_i, Theta_i)
 trained from version v_i accumulate until ``buffer_size`` arrive, then one
-flush advances the model.  With staleness s_i = v - v_i and decay weights
-w_i = w(s_i) in (0, 1]:
-
-  params  x^{v+1} = x^v + server_lr * (1/B) sum_i w_i Delta_i
-          (unnormalized FedBuff step: a stale buffer moves the model less)
-  g_G     fresh estimate g_B = -(sum_i w_i Delta_i / sum_i w_i) / (K eta),
-          mixed as g^{v+1} = (1 - rho) g^v + rho g_B,  rho = mean_i w_i
-  Theta   Theta_B = sum_i w_i Theta_i / sum_i w_i,
-          Theta^{v+1} = (1 - rho) Theta^v + rho Theta_B
-
-rho (the buffer "freshness") -> 1 recovers the synchronous Alg. 2 update
-exactly; a stale buffer drags the global geometry only part-way toward the
-arriving (outdated) client preconditioners — the staleness-aware Alignment.
-The flush is one jitted call over the stacked (B, ...) buffer.
+flush advances the model.  The flush itself is one call into the unified
+round engine (``core.engine.aggregate``) with staleness-decay weights
+w_i = w(v - v_i) in (0, 1]: the parameter step shrinks with staleness
+(unnormalized FedBuff mean), while g_G and Theta are freshness-mixed with
+rho = mean_i w_i — rho -> 1 recovers the synchronous Alg. 2 update
+*bitwise* (tested in tests/test_engine.py), and a stale buffer drags the
+global geometry only part-way toward the arriving (outdated) client
+preconditioners.  The drift-adaptive ``GeometryController`` update happens
+inside the same jitted flush, with beta additionally backed off by rho.
 """
 from __future__ import annotations
 
@@ -26,10 +21,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.drift import drift_metric
-from repro.core.server import weighted_client_mean, normalized_client_mean
+from repro.core.engine import (
+    AggregationConfig, aggregate, update_controller,
+)
 from repro.fed.async_runtime.latency import LatencyModel
-from repro.utils.tree import tree_norm_sq
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,41 +40,51 @@ class AsyncConfig:
     max_staleness: Optional[int] = None  # discard results staler than this
     latency: LatencyModel = dataclasses.field(default_factory=LatencyModel)
 
+    def __post_init__(self):
+        if self.buffer_size < 1:
+            raise ValueError(
+                f"buffer_size must be >= 1, got {self.buffer_size}")
+        if self.concurrency is not None and self.concurrency < 1:
+            raise ValueError(
+                f"concurrency must be >= 1, got {self.concurrency}")
+        if self.max_staleness is not None and self.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {self.max_staleness}")
+
     def resolve_concurrency(self, n_clients: int, participation: float) -> int:
         c = self.concurrency
         if c is None:
             c = max(self.buffer_size,
                     int(round(n_clients * participation)))
-        return max(1, min(c, n_clients))
+        c = max(1, min(c, n_clients))
+        if self.buffer_size > c:
+            raise ValueError(
+                f"buffer_size={self.buffer_size} exceeds the resolved "
+                f"concurrency {c} (n_clients={n_clients}, "
+                f"participation={participation}): the buffer could only "
+                "fill from already-delivered stragglers — raise "
+                "concurrency/participation or shrink buffer_size")
+        return c
 
 
 def make_async_aggregate_fn(*, lr: float, local_steps: int,
-                            server_lr: float = 1.0, jit: bool = True):
-    """Returns flush(params, theta, g_global, deltas, thetas, weights)
-    -> (params', theta', g_global', metrics); stacked (B, ...) buffer."""
+                            server_lr: float = 1.0, align: bool = True,
+                            jit: bool = True):
+    """Returns flush(params, theta, g_global, ctrl, deltas, thetas, weights)
+    -> (params', theta', g_global', ctrl', metrics); stacked (B, ...)
+    buffer.  One engine aggregate + one controller step, jitted together."""
+    cfg = AggregationConfig(lr=lr, local_steps=local_steps,
+                            server_lr=server_lr, align=align)
 
-    def flush(params, theta, g_global, deltas, thetas, weights):
-        w = weights.astype(jnp.float32)
-        rho = jnp.mean(w)                       # buffer freshness in (0, 1]
-        step = weighted_client_mean(deltas, w)  # (1/B) sum w_i Delta_i
-        new_params = jax.tree.map(
-            lambda p, d: (p.astype(jnp.float32)
-                          + server_lr * d).astype(p.dtype), params, step)
-        g_batch = jax.tree.map(
-            lambda d: -d / (local_steps * lr),
-            normalized_client_mean(deltas, w))
-        new_g = jax.tree.map(lambda old, gb: (1.0 - rho) * old + rho * gb,
-                             g_global, g_batch)
-        theta_batch = normalized_client_mean(thetas, w)
-        new_theta = jax.tree.map(
-            lambda old, tb: ((1.0 - rho) * old.astype(jnp.float32)
-                             + rho * tb).astype(old.dtype),
-            theta, theta_batch)
-        drift = drift_metric(thetas)
-        norm_drift = drift / (tree_norm_sq(theta_batch) + 1e-12)
-        metrics = {"loss": jnp.zeros(()),  # filled by the driver
-                   "drift": drift, "norm_drift": norm_drift,
-                   "freshness": rho}
-        return new_params, new_theta, new_g, metrics
+    def flush(params, theta, g_global, ctrl, deltas, thetas, weights):
+        new_params, new_theta, new_g, agg = aggregate(
+            params, theta, g_global, deltas, thetas, weights, cfg)
+        # drift-adaptive rule, additionally backed off by the staleness of
+        # the g_G estimate the next cohort will correct toward
+        new_ctrl = update_controller(ctrl, agg["norm_drift"],
+                                     agg["freshness"])
+        metrics = dict(agg, loss=jnp.zeros(()),  # loss filled by the driver
+                       beta=ctrl.beta)
+        return new_params, new_theta, new_g, new_ctrl, metrics
 
     return jax.jit(flush) if jit else flush

@@ -8,9 +8,12 @@ buffer flush (one server version).  Per client, local training runs at
 — semantically the client downloaded version v — and the result is delivered
 by the simulated-time scheduler after the client's sampled latency, possibly
 several versions later.  Staleness-aware FedPAC then decays each arrival's
-delta and Theta by w(s_i) before Alignment/Correction (see buffer.py), and
-``beta="auto"`` additionally scales the correction strength by the buffer
-freshness rho so stale g_G estimates correct less.
+delta and Theta by w(s_i) before Alignment/Correction (see buffer.py).
+
+The flush and the drift-adaptive beta update both run through the unified
+round engine, so the adaptive controller (``ServerState.geom``) is the same
+functional state the sync runtime evolves — a checkpoint taken under one
+runtime restores under the other.
 """
 from __future__ import annotations
 
@@ -25,8 +28,7 @@ from repro.core import (
     init_server, make_svd_codec, round_comm_bytes, zero_theta,
 )
 from repro.core.client import LocalRunConfig, client_round
-from repro.core.fedpac import BETA_MAX_AUTO
-from repro.core.server import ServerState
+from repro.core.engine import BETA_MAX_AUTO, advance_server, make_controller
 from repro.fed.base import FedExperiment
 from repro.fed.rounds import (
     FedConfig, parse_algorithm, resolve_beta, resolve_lr,
@@ -60,11 +62,11 @@ class AsyncFederatedExperiment(FedExperiment):
         lr = resolve_lr(fed, opt_name)
         self.lr = lr
 
-        beta, self._adaptive = resolve_beta(fed, correct)
-        self._beta = beta
-        self._beta_max = BETA_MAX_AUTO
+        beta, adaptive = resolve_beta(fed, correct)
+        ctrl = make_controller("auto" if adaptive else beta, correct=correct,
+                               beta_max=BETA_MAX_AUTO)
 
-        run = LocalRunConfig(lr=lr, local_steps=fed.local_steps, beta=beta,
+        run = LocalRunConfig(lr=lr, local_steps=fed.local_steps, beta=0.0,
                              hessian_freq=fed.hessian_freq, align=align)
 
         def local_fn(p, theta, g, batches, key, beta_in):
@@ -73,14 +75,15 @@ class AsyncFederatedExperiment(FedExperiment):
 
         self._local_fn = jax.jit(local_fn)
         self._flush_fn = make_async_aggregate_fn(
-            lr=lr, local_steps=fed.local_steps, server_lr=fed.server_lr)
+            lr=lr, local_steps=fed.local_steps, server_lr=fed.server_lr,
+            align=align)
         self._codec = make_svd_codec(fed.svd_rank) if light else None
         self._weight_fn = make_staleness_weight(
             self.acfg.staleness_mode, self.acfg.staleness_alpha,
             self.acfg.hinge_threshold)
 
-        self.server = init_server(params, self.opt)
-        self._theta0 = zero_theta(self.opt, params)
+        self.server = init_server(params, self.opt, geom=ctrl)
+        self._theta0 = zero_theta(self.opt, params) if align else None
         concurrency = self.acfg.resolve_concurrency(fed.n_clients,
                                                     fed.participation)
         self.scheduler = SimScheduler(self.acfg.latency, fed.n_clients,
@@ -103,7 +106,7 @@ class AsyncFederatedExperiment(FedExperiment):
             else self._theta0
         delta, theta_out, loss = self._local_fn(
             self.server.params, theta, self.server.g_global, batches, key,
-            jnp.float32(self._beta))
+            self.server.geom.beta)
         return {"delta": delta, "theta": theta_out, "loss": loss}
 
     # ------------------------------------------------------------ loop
@@ -145,17 +148,11 @@ class AsyncFederatedExperiment(FedExperiment):
         w = jnp.asarray(weights, jnp.float32)
         theta_ref = self.server.theta if self.server.theta is not None \
             else self._theta0
-        p, th, g, metrics = self._flush_fn(
+        p, th, g, ctrl, metrics = self._flush_fn(
             self.server.params, theta_ref, self.server.g_global,
-            deltas, thetas, w)
-        self.server = ServerState(p, th, g, version + 1, version + 1)
-
-        if self._adaptive:
-            d = float(metrics["norm_drift"])
-            rho = float(metrics["freshness"])
-            # drift-adaptive rule, additionally backed off by staleness of
-            # the g_G estimate the next cohort will correct toward
-            self._beta = self._beta_max * d / (1.0 + d) * rho
+            self.server.geom, deltas, thetas, w)
+        self.server = advance_server(self.server, p, th if self.align else
+                                     None, g, geom=ctrl, aligned=self.align)
 
         self.total_dropped += dropped
         self.total_discarded += discarded
@@ -163,7 +160,6 @@ class AsyncFederatedExperiment(FedExperiment):
         rec.update({
             "loss": float(np.mean([float(ev.payload["loss"])
                                    for ev in buffered])),
-            "beta": float(self._beta),
             "staleness": float(np.mean(stale)),
             "max_staleness": float(np.max(stale)),
             "sim_time": float(sched.now),

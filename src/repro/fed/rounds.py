@@ -8,13 +8,16 @@ Supports every algorithm in the paper's tables:
   fedpac_{sophia,muon,soap}      FedPAC (Alg. 2)
   + component ablations (align_only / correct_only) and _light (SVD upload)
 
-The buffered-asynchronous execution model of the same algorithms lives in
+The runtime is a thin driver over the unified round engine
+(``core.engine``): it samples cohorts and stages batches; the round itself
+is the engine's executor + aggregate + geometry controller.  The buffered-
+asynchronous execution model of the same algorithms lives in
 ``fed.async_runtime``; both implement ``fed.base.FedExperiment``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Union
+from typing import Callable, Optional, Union
 
 import numpy as np
 import jax
@@ -24,10 +27,14 @@ from repro import optim
 from repro.core import (
     make_round_fn, init_server, make_svd_codec, round_comm_bytes,
 )
-from repro.core.server import ServerState
+from repro.core.engine import (
+    BETA_MAX_AUTO, ExecutorConfig, make_controller,
+)
 from repro.fed.base import FedExperiment
 from repro.fed.scaffold import make_scaffold_round_fn, ScaffoldState
 from repro.fed.staging import stage_cohort_batches
+
+RUNTIMES = ("sync", "async")
 
 
 @dataclasses.dataclass
@@ -45,6 +52,32 @@ class FedConfig:
     seed: int = 0
     server_lr: float = 1.0
     runtime: str = "sync"          # "sync" | "async" (fed.base.make_experiment)
+    executor: str = "vmap"         # cohort executor: vmap|shard_map|chunked
+    chunk_size: int = 8            # for executor="chunked"
+
+    def __post_init__(self):
+        if not (0.0 < self.participation <= 1.0):
+            raise ValueError(
+                f"participation must be in (0, 1], got {self.participation}")
+        if self.runtime not in RUNTIMES:
+            raise ValueError(
+                f"unknown runtime {self.runtime!r} (want one of {RUNTIMES})")
+        self.executor_config()   # ExecutorConfig validates backend/chunk_size
+        if self.n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1, got {self.n_clients}")
+        if self.local_steps < 1:
+            raise ValueError(
+                f"local_steps must be >= 1, got {self.local_steps}")
+        if isinstance(self.beta, str) and self.beta != "auto":
+            raise ValueError(
+                f"beta must be a float or 'auto', got {self.beta!r}")
+
+    def executor_config(self) -> ExecutorConfig:
+        return ExecutorConfig(backend=self.executor,
+                              chunk_size=self.chunk_size)
+
+
+_KNOWN_OPTS = ("adamw", "sophia", "muon", "soap", "sgd")
 
 
 def parse_algorithm(name: str):
@@ -59,15 +92,20 @@ def parse_algorithm(name: str):
     if name == "fedcm":
         return "sgd", False, True, light
     kind, _, opt_name = name.partition("_")
-    if kind == "local":
-        return opt_name, False, False, light
-    if kind == "fedpac":
-        return opt_name, True, True, light
-    if kind == "align":      # align_only_soap
-        return name.split("_")[-1], True, False, light
-    if kind == "correct":    # correct_only_soap
-        return name.split("_")[-1], False, True, light
-    raise ValueError(name)
+    flags = {"local": (False, False), "fedpac": (True, True),
+             "align": (True, False), "correct": (False, True)}
+    if kind in ("align", "correct"):     # align_only_soap / correct_only_muon
+        opt_name = name.split("_")[-1]
+    if kind not in flags:
+        raise ValueError(
+            f"unknown algorithm {name!r}: expected fedavg|scaffold|fedcm or "
+            "local_|fedpac_|align_only_|correct_only_<optimizer>")
+    if opt_name not in _KNOWN_OPTS:
+        raise ValueError(
+            f"unknown optimizer {opt_name!r} in algorithm {name!r} "
+            f"(want one of {_KNOWN_OPTS})")
+    align, correct = flags[kind]
+    return opt_name, align, correct, light
 
 
 def resolve_lr(fed: FedConfig, opt_name: str) -> float:
@@ -111,23 +149,28 @@ class FederatedExperiment(FedExperiment):
         self.is_scaffold = opt_name == "scaffold"
         lr = resolve_lr(fed, opt_name)
         self.lr = lr
+        executor = fed.executor_config()
         if self.is_scaffold:
             self.opt = optim.make("sgd")
             self.round_fn = make_scaffold_round_fn(
                 loss_fn, lr=lr, local_steps=fed.local_steps,
-                n_clients=fed.n_clients, server_lr=fed.server_lr)
+                n_clients=fed.n_clients, server_lr=fed.server_lr,
+                executor=executor)
             self.scaffold_state = ScaffoldState.init(params, fed.n_clients)
+            geom = make_controller(0.0, correct=False)
         else:
             self.opt = optim.make(opt_name, **(opt_kwargs or {}))
             static_beta, adaptive = resolve_beta(fed, correct)
             beta = "auto" if adaptive else static_beta
+            geom = make_controller(beta, correct=correct,
+                                   beta_max=BETA_MAX_AUTO)
             codec = make_svd_codec(fed.svd_rank) if light else None
             self.round_fn = make_round_fn(
                 loss_fn, self.opt, lr=lr, local_steps=fed.local_steps,
                 beta=beta, align=align, correct=correct,
                 hessian_freq=fed.hessian_freq, server_lr=fed.server_lr,
-                compress_fn=codec)
-        self.server = init_server(params, self.opt)
+                compress_fn=codec, executor=executor)
+        self.server = init_server(params, self.opt, geom=geom)
         self.align = align
         self.history: list[dict] = []
 

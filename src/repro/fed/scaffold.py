@@ -5,18 +5,25 @@ Per-client control variate c_i and server control c; local step
 Option-II update  c_i' = c_i - c + (x0 - xK)/(K lr);
 server: c <- c + (S/N) mean_i (c_i' - c_i).
 
-Persistent per-client state is kept stacked (N, ...) so cohorts index it with
-a gather — the state lives sharded over the mesh in distributed runs.
+The parameter/g_G server update delegates to the unified round engine
+(``core.engine.aggregate``); only the control-variate bookkeeping is
+SCAFFOLD-specific.  Persistent per-client state is kept stacked (N, ...) so
+cohorts index it with a gather — the state lives sharded over the mesh in
+distributed runs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.server import ServerState
+from repro.core.engine import (
+    AggregationConfig, ExecutorConfig, advance_server, aggregate,
+    make_cohort_executor,
+)
 
 
 @dataclasses.dataclass
@@ -33,9 +40,14 @@ class ScaffoldState:
 
 
 def make_scaffold_round_fn(loss_fn, *, lr: float, local_steps: int,
-                           n_clients: int, server_lr: float = 1.0):
+                           n_clients: int, server_lr: float = 1.0,
+                           executor: Optional[ExecutorConfig] = None):
+    agg_cfg = AggregationConfig(lr=lr, local_steps=local_steps,
+                                server_lr=server_lr, align=False)
+    cohort_exec = make_cohort_executor(executor)
+
     @jax.jit
-    def round_fn(params, c_global, c_clients, cohort, batches, rng):
+    def round_fn(params, g_global, c_global, c_clients, cohort, batches):
         def one_client(cid, batch_i):
             c_i = jax.tree.map(lambda c: c[cid], c_clients)
 
@@ -60,27 +72,26 @@ def make_scaffold_round_fn(loss_fn, *, lr: float, local_steps: int,
             c_diff = jax.tree.map(lambda a, b: a - b, c_i_new, c_i)
             return delta, c_i_new, c_diff, jnp.mean(losses)
 
-        deltas, c_i_new, c_diffs, losses = jax.vmap(one_client)(
-            cohort, batches)
-        mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
-        new_params = jax.tree.map(
-            lambda p, d: (p.astype(jnp.float32) + server_lr * d).astype(p.dtype),
-            params, mean_delta)
+        deltas, c_i_new, c_diffs, losses = cohort_exec(
+            one_client, cohort, batches)
         s = cohort.shape[0]
+        weights = jnp.ones((s,), jnp.float32)
+        new_params, _, new_g, _ = aggregate(
+            params, None, g_global, deltas, None, weights, agg_cfg)
         new_c_global = jax.tree.map(
             lambda c, cd: c + (s / n_clients) * jnp.mean(cd, axis=0),
             c_global, c_diffs)
         new_c_clients = jax.tree.map(
             lambda all_c, upd: all_c.at[cohort].set(upd), c_clients, c_i_new)
-        g_global = jax.tree.map(lambda d: -d / (local_steps * lr), mean_delta)
-        return (new_params, new_c_global, new_c_clients, g_global,
+        return (new_params, new_c_global, new_c_clients, new_g,
                 jnp.mean(losses))
 
     def driver(server: ServerState, state: ScaffoldState, cohort, batches,
                rng):
-        p, cg, cc, g, loss = round_fn(server.params, state.c_global,
-                                      state.c_clients, cohort, batches, rng)
-        new_server = ServerState(p, None, g, server.round + 1)
+        p, cg, cc, g, loss = round_fn(server.params, server.g_global,
+                                      state.c_global, state.c_clients,
+                                      cohort, batches)
+        new_server = advance_server(server, p, None, g, aligned=False)
         return new_server, ScaffoldState(cg, cc), {
             "loss": loss, "drift": jnp.zeros(())}
 

@@ -18,11 +18,13 @@ LANES = 128
 SUBLANES = 8
 
 
-def _adam_kernel(g_ref, m_ref, v_ref, n_ref, m_out, v_out, *, b1, b2, eps):
+def _adam_kernel(bc_ref, g_ref, m_ref, v_ref, n_ref, m_out, v_out, *, b1, b2,
+                 eps):
     g = g_ref[...].astype(jnp.float32)
     m = b1 * m_ref[...].astype(jnp.float32) + (1 - b1) * g
     v = b2 * v_ref[...].astype(jnp.float32) + (1 - b2) * g * g
-    n_ref[...] = (m / (jnp.sqrt(v) + eps)).astype(n_ref.dtype)
+    bc1, bc2 = bc_ref[0, 0], bc_ref[0, 1]
+    n_ref[...] = ((m / bc1) / (jnp.sqrt(v / bc2) + eps)).astype(n_ref.dtype)
     m_out[...] = m.astype(m_out.dtype)
     v_out[...] = v.astype(v_out.dtype)
 
@@ -30,9 +32,15 @@ def _adam_kernel(g_ref, m_ref, v_ref, n_ref, m_out, v_out, *, b1, b2, eps):
 @functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "block",
                                              "interpret"))
 def adam_moments(g, m, v, *, b1: float = 0.95, b2: float = 0.95,
-                 eps: float = 1e-8, block: int = 1024,
+                 eps: float = 1e-8, block: int = 1024, step=None,
                  interpret: bool = False):
-    """Fused rotated-space Adam moments. Returns (n, m', v') as f32."""
+    """Fused rotated-space Adam moments. Returns (n, m', v') as f32.
+
+    ``step`` enables bias correction with t = step + 1, matching
+    ``optim.soap``'s warm-restarted local steps; None reproduces the raw
+    uncorrected direction.  It may be a traced scalar (the local-step scan
+    carry): the correction factors ride in as a scalar operand, so no
+    per-step recompilation."""
     shape = g.shape
     n_el = g.size
     width = SUBLANES * LANES
@@ -52,15 +60,21 @@ def adam_moments(g, m, v, *, b1: float = 0.95, b2: float = 0.95,
         extra = grid_rows * bm - rows
         gp, mp, vp = (jnp.pad(x, ((0, extra), (0, 0))) for x in (gp, mp, vp))
 
+    if step is None:
+        bc = jnp.ones((1, 2), jnp.float32)
+    else:
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc = jnp.stack([1.0 - b1 ** t, 1.0 - b2 ** t]).reshape(1, 2)
     kern = functools.partial(_adam_kernel, b1=b1, b2=b2, eps=eps)
     n_out, m_new, v_new = pl.pallas_call(
         kern,
         grid=(grid_rows,),
-        in_specs=[pl.BlockSpec((bm, width), lambda i: (i, 0))] * 3,
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0))]
+        + [pl.BlockSpec((bm, width), lambda i: (i, 0))] * 3,
         out_specs=[pl.BlockSpec((bm, width), lambda i: (i, 0))] * 3,
         out_shape=[jax.ShapeDtypeStruct(gp.shape, jnp.float32)] * 3,
         interpret=interpret,
-    )(gp, mp, vp)
+    )(bc, gp, mp, vp)
 
     def post(x):
         return x.reshape(-1)[:n_el].reshape(shape)

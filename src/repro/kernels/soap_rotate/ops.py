@@ -11,15 +11,16 @@ from repro.kernels.soap_rotate.kernel import adam_moments
 
 
 def soap_rotated_update(g, ql, qr, m, v, *, b1: float = 0.95,
-                        b2: float = 0.95, eps: float = 1e-8,
+                        b2: float = 0.95, eps: float = 1e-8, step=None,
                         use_pallas: bool = False, interpret: bool = True,
                         block: int = 128):
     if not use_pallas:
-        return ref.soap_rotated_update(g, ql, qr, m, v, b1=b1, b2=b2, eps=eps)
+        return ref.soap_rotated_update(g, ql, qr, m, v, b1=b1, b2=b2,
+                                       eps=eps, step=step)
     kw = dict(bm=block, bk=block, bn=block, interpret=interpret)
     g32 = g.astype(ql.dtype)
     g_rot = matmul_fused(matmul_fused(ql.T, g32, **kw), qr, **kw)
     n, m_new, v_new = adam_moments(g_rot, m, v, b1=b1, b2=b2, eps=eps,
-                                   interpret=interpret)
+                                   step=step, interpret=interpret)
     d = matmul_fused(matmul_fused(ql, n, **kw), qr.T, **kw)
     return d, m_new, v_new

@@ -4,7 +4,8 @@ Given gradient G, eigenbases (Q_L, Q_R), rotated moments (M, V):
   G'  = Q_L^T G Q_R
   M'  = b1 M + (1-b1) G'
   V'  = b2 V + (1-b2) G'**2
-  N   = M' / (sqrt(V') + eps)
+  N   = M'' / (sqrt(V'') + eps)   with M''/V'' the bias-corrected moments
+        when ``step`` is given (t = step + 1), else the raw M'/V'
   D   = Q_L N Q_R^T
 Returns (D, M', V').
 """
@@ -14,11 +15,15 @@ import jax.numpy as jnp
 
 
 def soap_rotated_update(g, ql, qr, m, v, *, b1: float = 0.95,
-                        b2: float = 0.95, eps: float = 1e-8):
+                        b2: float = 0.95, eps: float = 1e-8, step=None):
     gf = g.astype(jnp.float32)
     g_rot = ql.T @ gf @ qr
     m_new = b1 * m + (1 - b1) * g_rot
     v_new = b2 * v + (1 - b2) * g_rot * g_rot
-    n = m_new / (jnp.sqrt(v_new) + eps)
+    if step is None:
+        n = m_new / (jnp.sqrt(v_new) + eps)
+    else:
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        n = (m_new / (1 - b1 ** t)) / (jnp.sqrt(v_new / (1 - b2 ** t)) + eps)
     d = ql @ n @ qr.T
     return d, m_new, v_new

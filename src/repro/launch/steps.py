@@ -21,6 +21,7 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.optim.api import LocalOptimizer
 from repro.core.client import LocalRunConfig, client_round
+from repro.core.engine import AggregationConfig, aggregate
 
 
 def make_loss_fn(cfg: ModelConfig, *, remat: bool = True,
@@ -78,6 +79,7 @@ def make_fed_round_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
     loss_fn = make_loss_fn(cfg, remat=remat, seq_shard=seq_shard,
                            batch_axes=batch_axes)
     run = LocalRunConfig(lr=lr, local_steps=local_steps, beta=beta, align=True)
+    agg_cfg = AggregationConfig(lr=lr, local_steps=local_steps, align=True)
 
     def fed_round(params, theta, g_global, batch, rng):
         def split(x):  # (B, ...) -> (C, K, B/(C*K), ...)
@@ -90,12 +92,9 @@ def make_fed_round_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
         deltas, thetas, losses = jax.vmap(
             lambda bi, ki: client_round(loss_fn, opt, run, params, theta,
                                         g_global, bi, ki))(batches, keys)
-        mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
-        new_params = jax.tree.map(
-            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
-            params, mean_delta)
-        new_theta = jax.tree.map(lambda t: jnp.mean(t, axis=0), thetas)
-        new_g = jax.tree.map(lambda d: -d / (local_steps * lr), mean_delta)
+        new_params, new_theta, new_g, _ = aggregate(
+            params, theta, g_global, deltas, thetas,
+            jnp.ones((clients,), jnp.float32), agg_cfg)
         return new_params, new_theta, new_g, jnp.mean(losses)
 
     return fed_round

@@ -146,7 +146,13 @@ def make(b1: float = 0.95, b2: float = 0.95, eps: float = 1e-8,
         g_rot = _rot(g, qlf, qrf)  # Q_L^T G Q_R
         m_new = b1 * st["M"] + (1 - b1) * g_rot
         v_new = b2 * st["V"] + (1 - b2) * g_rot * g_rot
-        n_rot = m_new / (jnp.sqrt(v_new) + eps)
+        # Bias-corrected Adam in the rotated basis (matches the non-matrix
+        # fallback).  With warm restarts from zeroed moments every federated
+        # round, the uncorrected step is ~sqrt(1-b2^t)/(1-b1^t) of nominal
+        # for all K local steps — slow enough to sink Alg. 2's convergence.
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        n_rot = (m_new / (1 - b1 ** t)) / (
+            jnp.sqrt(v_new / (1 - b2 ** t)) + eps)
         d = _rot(n_rot, qlf, qrf, inverse=True)  # Q_L N Q_R^T
         if orig_shape is not None:
             d = d.reshape(orig_shape)

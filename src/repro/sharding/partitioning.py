@@ -126,6 +126,22 @@ def resolve_spec(
 SERVE_FSDP_RULES = _serve_fsdp_rules()
 
 
+def client_axis_spec(mesh: Mesh, preferred: Sequence[str] = ("pod", "data")):
+    """Mesh axes (and leading-dim PartitionSpec) for the cohort client axis.
+
+    Picks the subset of ``preferred`` axes present in ``mesh`` in order —
+    ("pod", "data") on the production mesh, ("data",) on a host mesh — so
+    the engine's shard_map executor shards clients over every federated
+    data axis the mesh exposes.
+    """
+    axes = tuple(a for a in preferred if a in mesh.shape)
+    if not axes:
+        raise ValueError(
+            f"mesh {dict(mesh.shape)} has none of the client axes "
+            f"{tuple(preferred)}")
+    return axes, P(axes if len(axes) > 1 else axes[0])
+
+
 def greedy_spec(shape: Sequence[int], mesh: Mesh,
                 axes_order: tuple[str, ...] = ("data", "model")) -> P:
     """Divisibility-safe generic spec for tensors without logical annotations

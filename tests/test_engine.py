@@ -1,0 +1,294 @@
+"""Unified round engine: sync/async bitwise equivalence, executor backends,
+functional geometry controller, checkpointed controller state, config
+validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import init_server, make_round_fn, zero_theta
+from repro.core.client import LocalRunConfig, client_round
+from repro.core.engine import (
+    ExecutorConfig, GeometryController, auto_controller, fixed_controller,
+    make_cohort_executor, make_controller, update_controller,
+)
+from repro.checkpoint import CheckpointManager
+from repro.fed import AsyncConfig, FedConfig
+from repro.fed.rounds import parse_algorithm
+from repro.fed.async_runtime.buffer import make_async_aggregate_fn
+
+S, K, D, OUT = 4, 3, 16, 8   # w is (16, 8): inside SOAP's matrix domain
+KEY = jax.random.key(0)
+
+
+def _problem():
+    W = jax.random.normal(KEY, (D, OUT))
+    params = {"w": jnp.zeros((D, OUT))}
+
+    def loss_fn(p, b):
+        X, Y = b
+        return jnp.mean((X @ p["w"] - Y) ** 2)
+
+    def batches(key):
+        X = jax.random.normal(key, (S, K, 8, D))
+        return X, X @ W
+
+    return params, loss_fn, batches
+
+
+# ------------------------------------------------------- sync == async flush
+
+def test_zero_staleness_flush_bitwise_matches_sync_round():
+    """A buffer flush with w_i = 1 (rho = 1) must produce a bitwise-identical
+    ServerState to one synchronous round on the same cohort."""
+    params, loss_fn, batches = _problem()
+    opt = optim.make("soap")
+    lr, beta = 0.05, 0.5
+    b = batches(jax.random.key(1))
+    rng = jax.random.key(2)
+
+    # sync path: the engine-backed round fn (eager so each op is its own
+    # XLA program — fusion cannot perturb the comparison)
+    rf = make_round_fn(loss_fn, opt, lr=lr, local_steps=K, beta=beta,
+                       jit=False)
+    server = init_server(params, opt)
+    sync_out, _ = rf(server, b, rng)
+
+    # async path: train the same cohort from the same snapshot, then one
+    # zero-staleness flush
+    theta0 = zero_theta(opt, params)
+    run = LocalRunConfig(lr=lr, local_steps=K, beta=0.0, align=True)
+    keys = jax.random.split(rng, S)
+    deltas, thetas, _ = jax.vmap(
+        lambda bi, ki: client_round(loss_fn, opt, run, params, theta0,
+                                    server.g_global, bi, ki,
+                                    beta=jnp.float32(beta)))(b, keys)
+    flush = make_async_aggregate_fn(lr=lr, local_steps=K, jit=False)
+    p, th, g, _, _ = flush(params, theta0, server.g_global,
+                           fixed_controller(beta), deltas, thetas,
+                           jnp.ones(S, jnp.float32))
+
+    for a, c in zip(jax.tree.leaves(sync_out.params), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    for a, c in zip(jax.tree.leaves(sync_out.theta), jax.tree.leaves(th)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    for a, c in zip(jax.tree.leaves(sync_out.g_global), jax.tree.leaves(g)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_no_align_round_keeps_theta_version():
+    params, loss_fn, batches = _problem()
+    opt = optim.make("soap")
+    rf = make_round_fn(loss_fn, opt, lr=0.05, local_steps=K, beta=0.0,
+                       align=False, correct=False)
+    server = init_server(params, opt)
+    out, metrics = rf(server, batches(jax.random.key(1)), jax.random.key(2))
+    assert out.round == 1 and out.theta_version == 0
+    assert out.theta is None
+    assert float(metrics["drift"]) > 0.0  # drift still measured
+
+    aligned = make_round_fn(loss_fn, opt, lr=0.05, local_steps=K, beta=0.0)(
+        init_server(params, opt), batches(jax.random.key(1)),
+        jax.random.key(2))[0]
+    assert aligned.theta_version == 1
+
+
+# ------------------------------------------------------------- executors
+
+@pytest.mark.parametrize("cfg", [
+    ExecutorConfig(backend="shard_map"),
+    ExecutorConfig(backend="chunked", chunk_size=2),
+    ExecutorConfig(backend="chunked", chunk_size=3),   # S=4: remainder path
+    ExecutorConfig(backend="chunked", chunk_size=16),  # chunk > cohort
+])
+def test_executor_backends_match_vmap(cfg):
+    params, loss_fn, batches = _problem()
+    opt = optim.make("soap")
+    b = batches(jax.random.key(1))
+    rng = jax.random.key(2)
+    outs = {}
+    for c in [ExecutorConfig(), cfg]:
+        rf = make_round_fn(loss_fn, opt, lr=0.05, local_steps=K, beta=0.5,
+                           executor=c)
+        server, m = rf(init_server(params, opt), b, rng)
+        outs[c.backend if c is cfg else "vmap"] = (server, m)
+    ref_s, ref_m = outs["vmap"]
+    got_s, got_m = outs[cfg.backend]
+    np.testing.assert_allclose(np.asarray(got_s.params["w"]),
+                               np.asarray(ref_s.params["w"]),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(got_m["loss"]), float(ref_m["loss"]),
+                               rtol=1e-6)
+    for a, c in zip(jax.tree.leaves(ref_s.theta),
+                    jax.tree.leaves(got_s.theta)):
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_shard_map_rejects_indivisible_cohort():
+    n_dev = len(jax.devices())
+    runner = make_cohort_executor(ExecutorConfig(backend="shard_map"))
+    if n_dev == 1:
+        pytest.skip("indivisibility needs a >1-device client axis")
+    bad = jnp.zeros((n_dev + 1, 3))
+    with pytest.raises(ValueError, match="not divisible"):
+        runner(lambda x: x * 2, bad)
+
+
+def test_executor_config_validation():
+    with pytest.raises(ValueError, match="backend"):
+        ExecutorConfig(backend="bogus")
+    with pytest.raises(ValueError, match="chunk_size"):
+        ExecutorConfig(backend="chunked", chunk_size=0)
+
+
+# ------------------------------------------------------- geometry controller
+
+def test_controller_is_jit_pure_state():
+    ctrl = auto_controller(beta_max=0.7)
+
+    @jax.jit
+    def step(c, d):
+        return update_controller(c, d, 1.0)
+
+    c1 = step(ctrl, jnp.float32(1.0))
+    assert isinstance(c1, GeometryController)
+    assert float(c1.beta) == pytest.approx(0.35)   # 0.7 * 1/(1+1)
+    assert float(c1.drift_ema) == pytest.approx(1.0)
+    # fixed controllers pass through untouched
+    fc = fixed_controller(0.5)
+    assert float(step(fc, jnp.float32(9.0)).beta) == 0.5
+
+
+def test_controller_freshness_backoff():
+    ctrl = auto_controller(beta_max=0.7)
+    full = update_controller(ctrl, jnp.float32(1.0), 1.0)
+    half = update_controller(ctrl, jnp.float32(1.0), 0.5)
+    assert float(half.beta) == pytest.approx(0.5 * float(full.beta))
+
+
+def test_controller_ema_smoothing():
+    ctrl = auto_controller(beta_max=0.7, ema=0.5)
+    c1 = update_controller(ctrl, jnp.float32(2.0))
+    assert float(c1.drift_ema) == pytest.approx(1.0)  # 0.5*0 + 0.5*2
+    c2 = update_controller(c1, jnp.float32(2.0))
+    assert float(c2.drift_ema) == pytest.approx(1.5)
+
+
+def test_adaptive_beta_evolves_inside_server_state():
+    params, loss_fn, batches = _problem()
+    opt = optim.make("soap")
+    rf = make_round_fn(loss_fn, opt, lr=0.05, local_steps=K, beta="auto")
+    server = init_server(params, opt)
+    rng = jax.random.key(3)
+    for r in range(3):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        server, m = rf(server, batches(k1), k2)
+    assert isinstance(server.geom, GeometryController)
+    assert server.geom.adaptive
+    assert float(server.geom.beta) > 0.0
+    assert isinstance(server.geom.beta, jax.Array)  # not a Python-side cell
+
+
+# ------------------------------------------------------------- checkpointing
+
+def test_checkpoint_roundtrips_controller_and_theta_version(tmp_path):
+    params, loss_fn, batches = _problem()
+    opt = optim.make("soap")
+    rf = make_round_fn(loss_fn, opt, lr=0.05, local_steps=K, beta="auto")
+    server = init_server(params, opt,
+                         geom=make_controller("auto", beta_max=0.7))
+    rng = jax.random.key(3)
+    for r in range(3):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        server, _ = rf(server, batches(k1), k2)
+    assert float(server.geom.beta) > 0.0
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(server)
+    restored = mgr.restore(server)
+    assert restored.round == server.round
+    assert restored.theta_version == server.theta_version == 3
+    assert restored.geom.adaptive and restored.geom.ema == server.geom.ema
+    assert float(restored.geom.beta) == pytest.approx(
+        float(server.geom.beta))
+    assert float(restored.geom.drift_ema) == pytest.approx(
+        float(server.geom.drift_ema))
+
+    # a restored run continues from the saved beta, not from 0: the next
+    # round *uses* (and reports) the checkpointed value
+    rng, k1, k2 = jax.random.split(rng, 3)
+    _, metrics = rf(restored, batches(k1), k2)
+    assert float(metrics["beta"]) == pytest.approx(float(server.geom.beta))
+
+
+def test_checkpoint_without_geom_restores_none(tmp_path):
+    params = {"w": jnp.zeros((4, 4))}
+    opt = optim.make("sgd")
+    server = init_server(params, opt)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(server)
+    assert mgr.restore(server).geom is None
+
+
+def test_legacy_checkpoint_keeps_template_controller(tmp_path):
+    """A pre-geom checkpoint (no 'geom' in meta.json) must not clobber the
+    running experiment's controller with None."""
+    import json, os
+    params = {"w": jnp.zeros((4, 4))}
+    opt = optim.make("sgd")
+    server = init_server(params, opt)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(server)
+    d = os.path.join(str(tmp_path), "step_00000000")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    meta.pop("geom")   # simulate a checkpoint written before controllers
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    template = init_server(params, opt, geom=fixed_controller(0.3))
+    restored = mgr.restore(template)
+    assert float(restored.geom.beta) == pytest.approx(0.3)
+
+
+# ------------------------------------------------------------- validation
+
+@pytest.mark.parametrize("kw", [
+    dict(participation=0.0), dict(participation=1.5),
+    dict(participation=-0.2), dict(runtime="bogus"),
+    dict(executor="bogus"), dict(chunk_size=0), dict(n_clients=0),
+    dict(local_steps=0), dict(beta="bananas"),
+])
+def test_fed_config_rejects_bad_values(kw):
+    with pytest.raises(ValueError):
+        FedConfig(**kw)
+
+
+def test_async_config_rejects_bad_values():
+    with pytest.raises(ValueError, match="buffer_size"):
+        AsyncConfig(buffer_size=0)
+    with pytest.raises(ValueError, match="concurrency"):
+        AsyncConfig(concurrency=0)
+    # buffer larger than what the resolved concurrency can ever deliver
+    with pytest.raises(ValueError, match="exceeds the resolved concurrency"):
+        AsyncConfig(buffer_size=8, concurrency=2).resolve_concurrency(
+            20, 0.5)
+    # clamped-by-n_clients path
+    with pytest.raises(ValueError, match="exceeds the resolved concurrency"):
+        AsyncConfig(buffer_size=8).resolve_concurrency(4, 1.0)
+    assert AsyncConfig(buffer_size=2).resolve_concurrency(20, 0.5) == 10
+
+
+@pytest.mark.parametrize("name", ["bogus", "local_bogus", "fedpac_",
+                                  "fedpac_bogus", "adamw"])
+def test_parse_algorithm_rejects_unknown(name):
+    with pytest.raises(ValueError, match="unknown"):
+        parse_algorithm(name)
+
+
+def test_parse_algorithm_known_matrix_unchanged():
+    assert parse_algorithm("fedavg") == ("sgd", False, False, False)
+    assert parse_algorithm("fedpac_soap_light") == ("soap", True, True, True)
+    assert parse_algorithm("correct_only_muon") == ("muon", False, True,
+                                                    False)

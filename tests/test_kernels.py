@@ -74,6 +74,15 @@ def test_soap_rotate_kernel(m, n):
                                      interpret=True)
     for w, o in zip(want, got):
         assert jnp.max(jnp.abs(w - o)) < 5e-5
+    # bias-corrected variant (step may be a traced scalar — see optim.soap)
+    want_bc = sr_ref.soap_rotated_update(g, ql, qr_, mm, vv,
+                                         step=jnp.int32(2))
+    got_bc = sr_ops.soap_rotated_update(g, ql, qr_, mm, vv,
+                                        step=jnp.int32(2), use_pallas=True,
+                                        interpret=True)
+    for w, o in zip(want_bc, got_bc):
+        assert jnp.max(jnp.abs(w - o)) < 5e-5
+    assert jnp.max(jnp.abs(want_bc[0] - want[0])) > 1e-3  # correction bites
 
 
 @pytest.mark.parametrize("shape", [(40,), (128, 256)])
