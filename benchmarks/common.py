@@ -7,11 +7,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import build_experiment
 from repro.data import make_image_classification, dirichlet_partition
 from repro.models.vision import (
     init_cnn, cnn_apply, init_vit, vit_apply, classification_loss, accuracy,
 )
-from repro.fed import FedConfig, FederatedExperiment
+from repro.fed import FedConfig
 
 ROWS = []
 
@@ -95,7 +96,8 @@ def run_algorithm(algo: str, params, loss_fn, batch_fn, eval_fn, *,
                     participation=participation, rounds=rounds,
                     local_steps=local_steps, lr=lr, beta=beta, seed=seed,
                     svd_rank=svd_rank)
-    exp = FederatedExperiment(fed, params, loss_fn, batch_fn, eval_fn)
+    exp = build_experiment(algo, params=params, loss_fn=loss_fn,
+                           client_batch_fn=batch_fn, eval_fn=eval_fn, fed=fed)
     t0 = time.perf_counter()
     hist = exp.run()
     wall = time.perf_counter() - t0

@@ -1,9 +1,11 @@
-"""Quickstart: FedPAC in ~40 lines.
+"""Quickstart: FedPAC in ~40 lines, via the public builder API.
 
 Federated CIFAR-like classification on non-IID clients: compare Local SOAP
 (Alg. 1, drifting preconditioners) against FedPAC_SOAP (Alg. 2).
 
   PYTHONPATH=src python examples/quickstart.py
+
+QUICKSTART_ROUNDS / QUICKSTART_SAMPLES shrink the run (CI smoke job).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -11,14 +13,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
+from repro.api import build_experiment
 from repro.data import make_image_classification, dirichlet_partition
 from repro.models.vision import init_cnn, cnn_apply, classification_loss, accuracy
-from repro.fed import FedConfig, FederatedExperiment
+
+ROUNDS = int(os.environ.get("QUICKSTART_ROUNDS", "15"))
+N = int(os.environ.get("QUICKSTART_SAMPLES", "3000"))
 
 # --- data: 10 clients, Dirichlet(0.1) label skew (strongly non-IID) -------
-X, y = make_image_classification(3000, image_size=12, n_classes=8, noise=2.0)
+X, y = make_image_classification(N, image_size=12, n_classes=8, noise=2.0)
 parts = dirichlet_partition(y, n_clients=10, alpha=0.1)
-Xe, ye = jnp.asarray(X[-600:]), jnp.asarray(y[-600:])
+n_eval = max(N // 5, 100)
+Xe, ye = jnp.asarray(X[-n_eval:]), jnp.asarray(y[-n_eval:])
 
 params = init_cnn(jax.random.key(0), n_classes=8, width=8, blocks=2)
 
@@ -34,9 +40,10 @@ def batch_fn(cid, rng):
 
 # --- run both algorithms ---------------------------------------------------
 for algo in ["local_soap", "fedpac_soap"]:
-    fed = FedConfig(algorithm=algo, n_clients=10, participation=0.5,
-                    rounds=15, local_steps=5, beta=0.5)
-    exp = FederatedExperiment(fed, params, loss_fn, batch_fn, eval_fn)
+    exp = build_experiment(algo, params=params, loss_fn=loss_fn,
+                           client_batch_fn=batch_fn, eval_fn=eval_fn,
+                           n_clients=10, participation=0.5, rounds=ROUNDS,
+                           local_steps=5, beta=0.5)
     hist = exp.run()
     print(f"{algo:14s} acc={hist[-1]['test_acc']:.3f} "
           f"loss={hist[-1]['loss']:.3f} drift={hist[-1]['drift']:.2e} "

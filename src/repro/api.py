@@ -1,0 +1,82 @@
+"""Top-level public API: the algorithm registry + the experiment builder.
+
+    from repro.api import build_experiment
+
+    exp = build_experiment("fedpac_soap", params=params, loss_fn=loss_fn,
+                           client_batch_fn=batch_fn, eval_fn=eval_fn,
+                           n_clients=20, participation=0.25, rounds=30)
+    history = exp.run()
+
+``build_experiment`` replaces the positional
+``make_experiment(fed, params, loss_fn, client_batch_fn, eval_fn,
+opt_kwargs, async_cfg)`` sprawl with a keyword builder that accepts either
+a registered algorithm name (every legacy paper-table string works), or an
+``AlgorithmSpec`` instance directly — including unregistered ones, so a
+custom algorithm is usable the moment it is constructed.
+
+Passing ``async_cfg`` selects the buffered-asynchronous runtime unless a
+runtime is named explicitly; any ``FedConfig`` field can be given as a
+keyword override.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+from repro.core.algorithms import (  # noqa: F401  (re-exported API surface)
+    AlgorithmSpec, ClientStateSpec, DuplicateAlgorithmError,
+    UnknownAlgorithmError, register, registered, resolve,
+)
+from repro.fed.base import FedExperiment, make_experiment  # noqa: F401
+from repro.fed.rounds import FedConfig, FederatedExperiment
+from repro.fed.async_runtime import (  # noqa: F401
+    AsyncConfig, AsyncFederatedExperiment, LatencyModel,
+)
+
+__all__ = [
+    "AlgorithmSpec", "AsyncConfig", "ClientStateSpec",
+    "DuplicateAlgorithmError", "FedConfig", "FedExperiment", "LatencyModel",
+    "UnknownAlgorithmError", "build_experiment", "make_experiment",
+    "register", "registered", "resolve",
+]
+
+
+def build_experiment(
+    algorithm: Union[str, AlgorithmSpec],
+    *,
+    params,
+    loss_fn: Callable,
+    client_batch_fn: Callable,
+    eval_fn: Optional[Callable] = None,
+    opt_kwargs: Optional[dict] = None,
+    async_cfg: Optional[AsyncConfig] = None,
+    fed: Optional[FedConfig] = None,
+    **fed_overrides,
+) -> FedExperiment:
+    """Build the right runtime for ``algorithm`` with keyword configuration.
+
+    algorithm: registered name (``"fedpac_soap"``, any legacy table string)
+      or an ``AlgorithmSpec`` — unregistered specs work too.
+    fed: optional base ``FedConfig``; ``fed_overrides`` are applied on top
+      (``rounds=30, n_clients=20, runtime="async", ...``).
+    async_cfg: execution-model knobs; implies ``runtime="async"`` when no
+      config was passed at all — an explicit ``fed`` config or ``runtime``
+      override is authoritative, and a sync one + async_cfg is an error.
+    """
+    spec = resolve(algorithm)
+    base = fed if fed is not None else FedConfig()
+    changes = dict(fed_overrides, algorithm=spec.name)
+    if async_cfg is not None and fed is None and "runtime" not in \
+            fed_overrides:
+        changes["runtime"] = "async"
+    cfg = dataclasses.replace(base, **changes)
+    if cfg.runtime == "sync":
+        if async_cfg is not None:
+            raise ValueError(
+                "async_cfg given but the config says runtime='sync' — set "
+                "runtime='async' (or drop the async_cfg)")
+        return FederatedExperiment(cfg, params, loss_fn, client_batch_fn,
+                                   eval_fn, opt_kwargs, spec=spec)
+    return AsyncFederatedExperiment(cfg, params, loss_fn, client_batch_fn,
+                                    eval_fn, opt_kwargs, async_cfg=async_cfg,
+                                    spec=spec)

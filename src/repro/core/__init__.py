@@ -5,10 +5,18 @@ from repro.core.engine import (
     AggregationConfig, BETA_MAX_AUTO, ExecutorConfig, GeometryController,
     advance_server, aggregate, aggregate_round, auto_controller,
     fixed_controller, make_cohort_executor, make_controller,
-    normalized_client_mean, update_controller, weighted_client_mean,
+    normalized_client_mean, precond_mixing_weights, update_controller,
+    weighted_client_mean,
 )
-from repro.core.fedpac import make_round_fn, zero_theta
+from repro.core.algorithms import (
+    AlgorithmSpec, ClientStateSpec, DuplicateAlgorithmError,
+    UnknownAlgorithmError, build_round_fn, make_local_update, register,
+    registered, resolve, zero_theta,
+)
+from repro.core.scaffold import ScaffoldState
+from repro.core.fedpac import make_round_fn
 from repro.core.fedsoa import make_fedsoa_round_fn, make_variant_round_fn, VARIANTS
+from repro.core import fedpm  # registers the preconditioned-mixing specs
 from repro.core.drift import drift_metric, drift_per_layer, spectral_drift
 from repro.core.compression import (
     make_svd_codec, svd_truncate, round_comm_bytes, compressed_bytes,

@@ -12,7 +12,7 @@ Layering (top to bottom):
 """
 from repro.core.engine.aggregation import (
     AggregationConfig, aggregate, aggregate_round, advance_server,
-    weighted_client_mean, normalized_client_mean,
+    precond_mixing_weights, weighted_client_mean, normalized_client_mean,
 )
 from repro.core.engine.geometry import (
     BETA_MAX_AUTO, GeometryController, auto_controller, fixed_controller,

@@ -74,6 +74,32 @@ def normalized_client_mean(tree, weights):
         tree)
 
 
+def precond_mixing_weights(deltas, thetas, eps: float = 1e-8):
+    """FedPM-style curvature-weighted mixing weights for the delta mean.
+
+    Preconditioned mixing of local parameters (Ishii et al., 2025): each
+    client's update is trusted inversely to the mass of its local curvature
+    estimate — clients sitting in sharp regions (large mean |Theta_i|) move
+    the server less, flat-region clients more.  Returns (S,) weights
+    normalized to mean 1, so the cohort freshness rho stays 1 and the
+    uniform mean is recovered when all clients see identical curvature.
+    """
+    del deltas
+    leaves = jax.tree.leaves(thetas)
+    if not leaves:
+        raise ValueError(
+            "preconditioned mixing needs per-client Theta uploads — use a "
+            "second-order local optimizer (sophia/muon/soap/adamw)")
+    total, count = 0.0, 0
+    for t in leaves:
+        tf = jnp.abs(t.astype(jnp.float32)).reshape(t.shape[0], -1)
+        total = total + jnp.sum(tf, axis=1)
+        count += tf.shape[1]
+    curv = total / count                    # (S,) mean |Theta_i|
+    w = 1.0 / (eps + curv)
+    return w / (jnp.mean(w) + eps)
+
+
 def aggregate(params, theta, g_global, deltas, thetas, weights,
               cfg: AggregationConfig):
     """One server update from a stacked cohort.

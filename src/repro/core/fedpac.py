@@ -6,12 +6,13 @@ Decouples parameter aggregation from geometry synchronization:
   Correction — local steps mix the locally preconditioned direction with the
                estimated global direction g_G^r (line 9, Eq. 9).
 
-``make_round_fn`` is a thin driver over the unified round engine
-(``core.engine``): the cohort runs under a pluggable executor (vmap |
-shard_map | chunked), the server update is the engine's single
-``aggregate``, and the drift-adaptive ``beta="auto"`` rule is the
-functional ``GeometryController`` carried in ``ServerState.geom`` — jit-
-pure, checkpointable, and identical across the sync and async runtimes.
+``make_round_fn`` is the core-level *stateless* entry point with the
+historical ``round_fn(server, batches, rng)`` signature: it builds an
+anonymous ``AlgorithmSpec`` for the requested (align, correct) combination
+and adapts ``core.algorithms.build_round_fn`` — the one uniform round
+implementation shared with SCAFFOLD, FedPM and both runtimes — by fixing
+``client_state=None`` and ``cohort=arange(S)``.  Registered algorithms and
+per-client persistent state go through ``build_round_fn`` directly.
 """
 from __future__ import annotations
 
@@ -20,13 +21,12 @@ from typing import Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.client import LocalRunConfig, client_round
+from repro.core.algorithms import AlgorithmSpec, build_round_fn, zero_theta
+from repro.core.engine import BETA_MAX_AUTO, ExecutorConfig
 from repro.core.server import ServerState
-from repro.core.engine import (
-    AggregationConfig, BETA_MAX_AUTO, ExecutorConfig, advance_server,
-    aggregate, make_cohort_executor, make_controller, update_controller,
-)
 from repro.optim.api import LocalOptimizer
+
+__all__ = ["make_round_fn", "zero_theta"]
 
 
 def make_round_fn(
@@ -53,57 +53,18 @@ def make_round_fn(
     naive FedSOA baseline of Alg. 1.  ``beta="auto"`` enables drift-adaptive
     correction (see ``core.engine.geometry``).
     """
-    default_ctrl = make_controller(beta, correct=correct, beta_max=beta_max,
-                                   ema=drift_ema)
-    run = LocalRunConfig(lr=lr, local_steps=local_steps, beta=0.0,
-                         hessian_freq=hessian_freq, align=align)
-    agg_cfg = AggregationConfig(lr=lr, local_steps=local_steps,
-                                server_lr=server_lr, align=align)
-    cohort = make_cohort_executor(executor)
+    spec = AlgorithmSpec(name=f"<inline:{opt.name}>", optimizer=opt.name,
+                         align=align, correct=correct)
+    driver = build_round_fn(
+        spec, loss_fn, opt, lr=lr, local_steps=local_steps, beta=beta,
+        hessian_freq=hessian_freq, server_lr=server_lr,
+        compress_fn=compress_fn, beta_max=beta_max, drift_ema=drift_ema,
+        executor=executor, jit=jit)
 
-    def round_fn(params, theta, g_global, ctrl, batches, rng):
-        n_clients = jax.tree.leaves(batches)[0].shape[0]
-        keys = jax.random.split(rng, n_clients)
+    def round_fn(server: ServerState, batches, rng):
+        s = jax.tree.leaves(batches)[0].shape[0]
+        new_server, _, metrics = driver(server, None, jnp.arange(s), batches,
+                                        rng)
+        return new_server, metrics
 
-        def one_client(batch_i, key_i):
-            return client_round(loss_fn, opt, run, params, theta,
-                                g_global, batch_i, key_i, beta=ctrl.beta)
-
-        deltas, thetas, losses = cohort(one_client, batches, keys)
-        if compress_fn is not None:
-            # Clients upload compressed Theta; server aggregates the decoded
-            # reconstruction (accuracy/bandwidth trade-off of Table 6).
-            thetas = compress_fn(thetas)
-        weights = jnp.ones((n_clients,), jnp.float32)
-        new_params, new_theta, new_g, agg = aggregate(
-            params, theta, g_global, deltas, thetas, weights, agg_cfg)
-        new_ctrl = update_controller(ctrl, agg["norm_drift"],
-                                     agg["freshness"])
-        metrics = dict(agg, loss=jnp.mean(losses), beta=ctrl.beta)
-        return new_params, new_theta, new_g, new_ctrl, metrics
-
-    if jit:
-        round_fn = jax.jit(round_fn)
-
-    def driver(server: ServerState, batches, rng):
-        ctrl = server.geom if server.geom is not None else default_ctrl
-        theta = server.theta
-        if align and theta is None:
-            # round 0: no reference yet -> align to the fresh (zero) state.
-            theta = zero_theta(opt, server.params)
-        p, th, g, ctrl, metrics = round_fn(server.params, theta,
-                                           server.g_global, ctrl, batches,
-                                           rng)
-        return advance_server(server, p, th, g, geom=ctrl,
-                              aligned=align), metrics
-
-    return driver
-
-
-def zero_theta(opt: LocalOptimizer, params):
-    """Fresh (zero) preconditioner pytree for ``opt`` on ``params``.
-
-    Round 0 has no global reference yet; both runtimes align to this."""
-    state = jax.eval_shape(opt.init, params)
-    theta_shape = jax.eval_shape(lambda s: opt.get_precond(s), state)
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), theta_shape)
+    return round_fn

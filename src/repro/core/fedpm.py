@@ -1,0 +1,30 @@
+"""FedPM-style preconditioned-mixing aggregation — the registry's
+extensibility proof.
+
+Curvature-weighted mixing of local updates (after Ishii et al., 2025):
+clients train with a second-order optimizer under FedPAC Alignment, and the
+server replaces the uniform delta mean with weights inversely proportional
+to each client's local curvature mass (``engine.aggregation.
+precond_mixing_weights``) — sharp-region clients move the model less.
+
+Note what this module does NOT touch: ``fed/rounds.py``, the runtimes, the
+engine.  A genuinely new algorithm is ~10 lines of ``AlgorithmSpec`` —
+declare the optimizer, the alignment policy, and a mixing hook, and both
+runtimes (sync and buffered-async) run it through the one engine path.
+"""
+from __future__ import annotations
+
+from repro.core.algorithms import AlgorithmSpec, register
+from repro.core.engine.aggregation import precond_mixing_weights
+
+# second-order local optimizers only: mixing needs a non-empty Theta upload
+_FEDPM_OPTS = ("adamw", "sophia", "muon", "soap")
+
+FEDPM_SPECS = {
+    opt_name: register(AlgorithmSpec(
+        name=f"fedpm_{opt_name}", optimizer=opt_name, align=True,
+        mixing=precond_mixing_weights,
+        description=f"preconditioned mixing with {opt_name}: curvature-"
+                    "weighted delta mean under aligned geometry"))
+    for opt_name in _FEDPM_OPTS
+}

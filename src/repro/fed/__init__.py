@@ -1,6 +1,9 @@
+from repro.core.algorithms import (
+    AlgorithmSpec, ClientStateSpec, register, registered, resolve,
+)
+from repro.core.scaffold import ScaffoldState
 from repro.fed.base import FedExperiment, make_experiment
 from repro.fed.rounds import FedConfig, FederatedExperiment, parse_algorithm
-from repro.fed.scaffold import make_scaffold_round_fn, ScaffoldState
 from repro.fed.staging import stage_client_batches, stage_cohort_batches
 from repro.fed.async_runtime import (
     AsyncConfig, AsyncFederatedExperiment, LatencyModel,

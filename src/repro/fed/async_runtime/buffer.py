@@ -69,14 +69,21 @@ class AsyncConfig:
 
 def make_async_aggregate_fn(*, lr: float, local_steps: int,
                             server_lr: float = 1.0, align: bool = True,
-                            jit: bool = True):
+                            mixing=None, jit: bool = True):
     """Returns flush(params, theta, g_global, ctrl, deltas, thetas, weights)
     -> (params', theta', g_global', ctrl', metrics); stacked (B, ...)
-    buffer.  One engine aggregate + one controller step, jitted together."""
+    buffer.  One engine aggregate + one controller step, jitted together.
+
+    ``mixing`` is an optional AlgorithmSpec hook ``(deltas, thetas) ->
+    (B,)`` (e.g. preconditioned mixing); its weights multiply the
+    staleness-decay weights, so a stale *and* sharp-curvature client is
+    damped by both policies."""
     cfg = AggregationConfig(lr=lr, local_steps=local_steps,
                             server_lr=server_lr, align=align)
 
     def flush(params, theta, g_global, ctrl, deltas, thetas, weights):
+        if mixing is not None:
+            weights = weights * mixing(deltas, thetas)
         new_params, new_theta, new_g, agg = aggregate(
             params, theta, g_global, deltas, thetas, weights, cfg)
         # drift-adaptive rule, additionally backed off by the staleness of

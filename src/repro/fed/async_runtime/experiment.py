@@ -1,5 +1,5 @@
 """``AsyncFederatedExperiment`` — the buffered-asynchronous execution model
-for every (non-scaffold) algorithm the repo supports.
+for every stateless-client ``AlgorithmSpec`` the registry knows.
 
 Drop-in interchangeable with the synchronous ``FederatedExperiment`` via the
 shared ``fed.base.FedExperiment`` interface: one ``run_round()`` is one
@@ -9,6 +9,12 @@ buffer flush (one server version).  Per client, local training runs at
 by the simulated-time scheduler after the client's sampled latency, possibly
 several versions later.  Staleness-aware FedPAC then decays each arrival's
 delta and Theta by w(s_i) before Alignment/Correction (see buffer.py).
+
+The local update and all algorithm policy (beta pinning, upload codec,
+mixing weights, comm accounting) come from the resolved ``AlgorithmSpec`` —
+the same spec the sync runtime consumes.  Algorithms that declare lock-step
+per-client persistent state (``spec.client_state``, e.g. SCAFFOLD) are
+rejected generically: buffered execution has no lock-step state exchange.
 
 The flush and the drift-adaptive beta update both run through the unified
 round engine, so the adaptive controller (``ServerState.geom``) is the same
@@ -23,16 +29,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro import optim
-from repro.core import (
-    init_server, make_svd_codec, round_comm_bytes, zero_theta,
-)
-from repro.core.client import LocalRunConfig, client_round
+from repro.core import init_server, zero_theta
+from repro.core.algorithms import AlgorithmSpec, make_local_update, resolve
+from repro.core.client import LocalRunConfig
 from repro.core.engine import BETA_MAX_AUTO, advance_server, make_controller
 from repro.fed.base import FedExperiment
-from repro.fed.rounds import (
-    FedConfig, parse_algorithm, resolve_beta, resolve_lr,
-)
+from repro.fed.rounds import FedConfig, resolve_lr
 from repro.fed.staging import stage_client_batches
 from repro.fed.async_runtime.buffer import AsyncConfig, make_async_aggregate_fn
 from repro.fed.async_runtime.scheduler import SimScheduler
@@ -45,45 +47,50 @@ class AsyncFederatedExperiment(FedExperiment):
     def __init__(self, fed: FedConfig, params, loss_fn: Callable,
                  client_batch_fn: Callable, eval_fn: Optional[Callable] = None,
                  opt_kwargs: Optional[dict] = None,
-                 async_cfg: Optional[AsyncConfig] = None):
-        self.fed = fed
+                 async_cfg: Optional[AsyncConfig] = None,
+                 spec: Optional[AlgorithmSpec] = None):
+        super().__init__(fed)
+        self.spec = resolve(spec if spec is not None else fed.algorithm)
+        if self.spec.client_state is not None:
+            raise ValueError(
+                f"algorithm {self.spec.name!r} declares lock-step per-client "
+                "persistent state, which buffered-asynchronous execution "
+                "cannot exchange — use the synchronous runtime")
         self.acfg = async_cfg or AsyncConfig()
         self.loss_fn = loss_fn
         self.client_batch_fn = client_batch_fn
         self.eval_fn = eval_fn
 
-        opt_name, align, correct, light = parse_algorithm(fed.algorithm)
-        if opt_name == "scaffold":
-            raise ValueError(
-                "scaffold needs lock-step persistent control variates; "
-                "use the synchronous runtime")
-        self.opt = optim.make(opt_name, **(opt_kwargs or {}))
-        self.align = align
-        lr = resolve_lr(fed, opt_name)
-        self.lr = lr
+        self.opt = self.spec.make_optimizer(**(opt_kwargs or {}))
+        self.align = self.spec.align
+        self.lr = resolve_lr(fed, self.spec)
 
-        beta, adaptive = resolve_beta(fed, correct)
-        ctrl = make_controller("auto" if adaptive else beta, correct=correct,
+        beta = self.spec.resolve_beta(fed.beta)
+        ctrl = make_controller(beta, correct=self.spec.correct,
                                beta_max=BETA_MAX_AUTO)
 
-        run = LocalRunConfig(lr=lr, local_steps=fed.local_steps, beta=0.0,
-                             hessian_freq=fed.hessian_freq, align=align)
+        run = LocalRunConfig(lr=self.lr, local_steps=fed.local_steps,
+                             beta=0.0, hessian_freq=fed.hessian_freq,
+                             align=self.align)
+        local_fn = make_local_update(self.spec, loss_fn, self.opt, run)
 
-        def local_fn(p, theta, g, batches, key, beta_in):
-            return client_round(loss_fn, self.opt, run, p, theta, g,
-                                batches, key, beta=beta_in)
+        def local(p, theta, g, batches, key, beta_in):
+            delta, theta_out, _, loss = local_fn(
+                p, theta, g, beta=beta_in, view=None, batch_i=batches,
+                key_i=key)
+            return delta, theta_out, loss
 
-        self._local_fn = jax.jit(local_fn)
+        self._local_fn = jax.jit(local)
         self._flush_fn = make_async_aggregate_fn(
-            lr=lr, local_steps=fed.local_steps, server_lr=fed.server_lr,
-            align=align)
-        self._codec = make_svd_codec(fed.svd_rank) if light else None
+            lr=self.lr, local_steps=fed.local_steps, server_lr=fed.server_lr,
+            align=self.align, mixing=self.spec.mixing)
+        self._codec = self.spec.make_codec(fed.svd_rank)
         self._weight_fn = make_staleness_weight(
             self.acfg.staleness_mode, self.acfg.staleness_alpha,
             self.acfg.hinge_threshold)
 
         self.server = init_server(params, self.opt, geom=ctrl)
-        self._theta0 = zero_theta(self.opt, params) if align else None
+        self._theta0 = zero_theta(self.opt, params) if self.align else None
         concurrency = self.acfg.resolve_concurrency(fed.n_clients,
                                                     fed.participation)
         self.scheduler = SimScheduler(self.acfg.latency, fed.n_clients,
@@ -91,7 +98,6 @@ class AsyncFederatedExperiment(FedExperiment):
         # batches/keys draw from a separate stream so the simulated event
         # order is invariant to how many batch samples a client consumes.
         self.rng = np.random.default_rng(fed.seed + 1)
-        self.history: list[dict] = []
         self.total_dropped = 0
         self.total_discarded = 0
 
@@ -176,8 +182,5 @@ class AsyncFederatedExperiment(FedExperiment):
     # ------------------------------------------------------------ accounting
 
     def comm_bytes_per_round(self) -> int:
-        theta = self.server.theta if self.align else None
-        _, _, _, light = parse_algorithm(self.fed.algorithm)
-        return round_comm_bytes(
-            self.server.params, theta,
-            compressed_rank=self.fed.svd_rank if light else None)
+        return self.spec.comm_bytes(self.server.params, self.server.theta,
+                                    svd_rank=self.fed.svd_rank)

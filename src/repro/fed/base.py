@@ -7,7 +7,13 @@ implement, so benchmarks and examples can swap execution models without
 touching algorithm code.  One ``run_round()`` is one server model update —
 a communication round in the sync runtime, a buffer flush in the async one.
 
-``make_experiment`` picks the runtime from ``FedConfig.runtime``.
+The base class owns the config/rounds contract: subclasses call
+``super().__init__(fed)`` with any config exposing an integer ``rounds``
+attribute (``FedConfig`` in-tree), which also initializes ``history``.
+Round logging goes through the single overridable ``log_round`` hook.
+
+``make_experiment`` picks the runtime from ``FedConfig.runtime`` — it is
+the legacy positional constructor; prefer ``repro.api.build_experiment``.
 """
 from __future__ import annotations
 
@@ -16,9 +22,26 @@ from typing import Optional
 
 
 class FedExperiment(abc.ABC):
-    """Drives server model updates for any algorithm over client datasets."""
+    """Drives server model updates for any algorithm over client datasets.
 
+    Contract declared here (not ad hoc in subclasses):
+      fed      — the experiment config; must expose an int ``rounds``
+      history  — list of per-round metric dicts, appended by run_round()
+    """
+
+    fed: "FedConfig"     # noqa: F821 — any config with an int .rounds
     history: list
+
+    def __init__(self, fed):
+        rounds = getattr(fed, "rounds", None)
+        if not isinstance(rounds, int) or isinstance(rounds, bool):
+            raise TypeError(
+                "FedExperiment config must expose an integer 'rounds' "
+                f"attribute (got {type(fed).__name__} with "
+                f"rounds={rounds!r}) — pass a FedConfig or a compatible "
+                "config object")
+        self.fed = fed
+        self.history = []
 
     @abc.abstractmethod
     def run_round(self) -> dict:
@@ -28,17 +51,26 @@ class FedExperiment(abc.ABC):
     def comm_bytes_per_round(self) -> int:
         """Per-client upload bytes for one round (Table 6 accounting)."""
 
+    def log_round(self, rec: dict, r: int) -> None:
+        """Per-round logging hook; override to route metrics elsewhere."""
+        print({k: round(v, 4) for k, v in rec.items()})
+
     def run(self, rounds: Optional[int] = None, log_every: int = 0):
+        """Run ``rounds`` model updates (default: ``self.fed.rounds``)."""
         for r in range(rounds if rounds is not None else self.fed.rounds):
             rec = self.run_round()
             if log_every and (r % log_every == 0):
-                print({k: round(v, 4) for k, v in rec.items()})
+                self.log_round(rec, r)
         return self.history
 
 
 def make_experiment(fed, params, loss_fn, client_batch_fn, eval_fn=None,
                     opt_kwargs=None, async_cfg=None) -> FedExperiment:
-    """Instantiate the runtime named by ``fed.runtime`` ("sync" | "async")."""
+    """Instantiate the runtime named by ``fed.runtime`` ("sync" | "async").
+
+    Legacy positional entry point; ``repro.api.build_experiment`` is the
+    keyword builder that also accepts ``AlgorithmSpec`` values directly.
+    """
     if fed.runtime == "sync":
         if async_cfg is not None:
             raise ValueError(

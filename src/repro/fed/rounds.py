@@ -1,18 +1,24 @@
 """Synchronous federated runtime: client sampling, batch staging, round loop.
 
-Supports every algorithm in the paper's tables:
+Algorithms are first-class ``AlgorithmSpec`` values resolved from the
+registry (``core.algorithms``) — the legacy strings from the paper's tables
+all resolve there:
+
   fedavg                         SGD locally, parameter averaging
-  scaffold                       control variates (fed/scaffold.py)
+  scaffold                       control variates (core/scaffold.py)
   fedcm                          client momentum == correction-only + SGD
   local_{adamw,sophia,muon,soap} FedSOA (Alg. 1) with that optimizer
   fedpac_{sophia,muon,soap}      FedPAC (Alg. 2)
+  fedpm_{sophia,muon,soap}       preconditioned mixing (core/fedpm.py)
   + component ablations (align_only / correct_only) and _light (SVD upload)
 
 The runtime is a thin driver over the unified round engine
 (``core.engine``): it samples cohorts and stages batches; the round itself
-is the engine's executor + aggregate + geometry controller.  The buffered-
-asynchronous execution model of the same algorithms lives in
-``fed.async_runtime``; both implement ``fed.base.FedExperiment``.
+is the spec-built uniform driver (``core.algorithms.build_round_fn``) —
+one signature for every algorithm, per-client persistent state (SCAFFOLD's
+control variates) included.  The buffered-asynchronous execution model of
+the same specs lives in ``fed.async_runtime``; both implement
+``fed.base.FedExperiment``.
 """
 from __future__ import annotations
 
@@ -24,14 +30,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.core import (
-    make_round_fn, init_server, make_svd_codec, round_comm_bytes,
-)
-from repro.core.engine import (
-    BETA_MAX_AUTO, ExecutorConfig, make_controller,
-)
+from repro.core import init_server
+from repro.core.algorithms import AlgorithmSpec, build_round_fn, resolve
+from repro.core.engine import BETA_MAX_AUTO, ExecutorConfig, make_controller
 from repro.fed.base import FedExperiment
-from repro.fed.scaffold import make_scaffold_round_fn, ScaffoldState
 from repro.fed.staging import stage_cohort_batches
 
 RUNTIMES = ("sync", "async")
@@ -77,56 +79,31 @@ class FedConfig:
                               chunk_size=self.chunk_size)
 
 
-_KNOWN_OPTS = ("adamw", "sophia", "muon", "soap", "sgd")
-
-
 def parse_algorithm(name: str):
-    """-> (optimizer_name, align, correct, light)."""
-    light = name.endswith("_light")
-    if light:
-        name = name[: -len("_light")]
-    if name == "fedavg":
-        return "sgd", False, False, light
-    if name == "scaffold":
-        return "scaffold", False, False, light
-    if name == "fedcm":
-        return "sgd", False, True, light
-    kind, _, opt_name = name.partition("_")
-    flags = {"local": (False, False), "fedpac": (True, True),
-             "align": (True, False), "correct": (False, True)}
-    if kind in ("align", "correct"):     # align_only_soap / correct_only_muon
-        opt_name = name.split("_")[-1]
-    if kind not in flags:
-        raise ValueError(
-            f"unknown algorithm {name!r}: expected fedavg|scaffold|fedcm or "
-            "local_|fedpac_|align_only_|correct_only_<optimizer>")
-    if opt_name not in _KNOWN_OPTS:
-        raise ValueError(
-            f"unknown optimizer {opt_name!r} in algorithm {name!r} "
-            f"(want one of {_KNOWN_OPTS})")
-    align, correct = flags[kind]
-    return opt_name, align, correct, light
+    """Legacy flag-tuple view of an algorithm string.
+
+    -> (optimizer_name, align, correct, light).  Deprecated: strings now
+    resolve to registered ``AlgorithmSpec`` values (``core.algorithms``);
+    this shim survives for callers that still want the PR-2-era tuple.
+    Prefer ``repro.core.algorithms.resolve(name)`` — the spec additionally
+    carries the beta policy, upload codec, client-state protocol, and
+    mixing hook that this tuple cannot express.
+    """
+    spec = resolve(name)
+    return spec.optimizer, spec.align, spec.correct, spec.upload == "svd"
 
 
-def resolve_lr(fed: FedConfig, opt_name: str) -> float:
-    """Explicit fed.lr wins — including falsy values like 0.0."""
+def resolve_lr(fed: FedConfig, spec_or_opt: Union[AlgorithmSpec, str]
+               ) -> float:
+    """Explicit fed.lr wins — including falsy values like 0.0 — then the
+    spec's declared default_lr, then the optimizer's paper-table default."""
     if fed.lr is not None:
         return fed.lr
-    return optim.DEFAULT_LR.get(opt_name, 1e-2)
-
-
-def resolve_beta(fed: FedConfig, correct: bool):
-    """-> (static_beta, adaptive): the one beta rule for both runtimes.
-
-    No correction => 0; FedCM pins beta to its (1 - alpha) = 0.9;
-    beta="auto" starts at 0 and is driven by measured drift each round."""
-    if not correct:
-        return 0.0, False
-    if fed.algorithm == "fedcm":
-        return 0.9, False
-    if fed.beta == "auto":
-        return 0.0, True
-    return float(fed.beta), False
+    if isinstance(spec_or_opt, AlgorithmSpec):
+        if spec_or_opt.default_lr is not None:
+            return spec_or_opt.default_lr
+        spec_or_opt = spec_or_opt.optimizer
+    return optim.DEFAULT_LR.get(spec_or_opt, 1e-2)
 
 
 class FederatedExperiment(FedExperiment):
@@ -134,45 +111,37 @@ class FederatedExperiment(FedExperiment):
 
     ``client_batch_fn(client_id, rng) -> batch pytree`` supplies one local
     minibatch; batches for a round are stacked to (S, K, ...).
+
+    ``spec`` (optional) supplies the algorithm directly — an unregistered
+    ``AlgorithmSpec`` works; ``fed.algorithm`` is only consulted when it is
+    None.  The spec is resolved once here and reused for the round fn, the
+    optimizer, and comm accounting.
     """
 
     def __init__(self, fed: FedConfig, params, loss_fn: Callable,
                  client_batch_fn: Callable, eval_fn: Optional[Callable] = None,
-                 opt_kwargs: Optional[dict] = None):
-        self.fed = fed
+                 opt_kwargs: Optional[dict] = None,
+                 spec: Optional[AlgorithmSpec] = None):
+        super().__init__(fed)
+        self.spec = resolve(spec if spec is not None else fed.algorithm)
         self.loss_fn = loss_fn
         self.client_batch_fn = client_batch_fn
         self.eval_fn = eval_fn
         self.rng = np.random.default_rng(fed.seed)
 
-        opt_name, align, correct, light = parse_algorithm(fed.algorithm)
-        self.is_scaffold = opt_name == "scaffold"
-        lr = resolve_lr(fed, opt_name)
-        self.lr = lr
-        executor = fed.executor_config()
-        if self.is_scaffold:
-            self.opt = optim.make("sgd")
-            self.round_fn = make_scaffold_round_fn(
-                loss_fn, lr=lr, local_steps=fed.local_steps,
-                n_clients=fed.n_clients, server_lr=fed.server_lr,
-                executor=executor)
-            self.scaffold_state = ScaffoldState.init(params, fed.n_clients)
-            geom = make_controller(0.0, correct=False)
-        else:
-            self.opt = optim.make(opt_name, **(opt_kwargs or {}))
-            static_beta, adaptive = resolve_beta(fed, correct)
-            beta = "auto" if adaptive else static_beta
-            geom = make_controller(beta, correct=correct,
-                                   beta_max=BETA_MAX_AUTO)
-            codec = make_svd_codec(fed.svd_rank) if light else None
-            self.round_fn = make_round_fn(
-                loss_fn, self.opt, lr=lr, local_steps=fed.local_steps,
-                beta=beta, align=align, correct=correct,
-                hessian_freq=fed.hessian_freq, server_lr=fed.server_lr,
-                compress_fn=codec, executor=executor)
+        self.opt = self.spec.make_optimizer(**(opt_kwargs or {}))
+        self.lr = resolve_lr(fed, self.spec)
+        beta = self.spec.resolve_beta(fed.beta)
+        self.round_fn = build_round_fn(
+            self.spec, loss_fn, self.opt, lr=self.lr,
+            local_steps=fed.local_steps, beta=beta,
+            hessian_freq=fed.hessian_freq, server_lr=fed.server_lr,
+            compress_fn=self.spec.make_codec(fed.svd_rank),
+            executor=fed.executor_config(), n_clients=fed.n_clients)
+        geom = make_controller(beta, correct=self.spec.correct,
+                               beta_max=BETA_MAX_AUTO)
         self.server = init_server(params, self.opt, geom=geom)
-        self.align = align
-        self.history: list[dict] = []
+        self.client_state = self.spec.init_client_state(params, fed.n_clients)
 
     # ------------------------------------------------------------ staging
 
@@ -191,12 +160,9 @@ class FederatedExperiment(FedExperiment):
         cohort = self._sample_cohort()
         batches = self._stage_batches(cohort)
         key = jax.random.key(int(self.rng.integers(0, 2**31)))
-        if self.is_scaffold:
-            self.server, self.scaffold_state, metrics = self.round_fn(
-                self.server, self.scaffold_state, jnp.asarray(cohort), batches,
-                key)
-        else:
-            self.server, metrics = self.round_fn(self.server, batches, key)
+        self.server, self.client_state, metrics = self.round_fn(
+            self.server, self.client_state, jnp.asarray(cohort), batches,
+            key)
         rec = {k: float(v) for k, v in metrics.items()}
         rec["round"] = self.server.round
         if self.eval_fn is not None:
@@ -208,8 +174,5 @@ class FederatedExperiment(FedExperiment):
     # ------------------------------------------------------------ accounting
 
     def comm_bytes_per_round(self) -> int:
-        theta = self.server.theta if self.align else None
-        _, _, _, light = parse_algorithm(self.fed.algorithm)
-        return round_comm_bytes(
-            self.server.params, theta,
-            compressed_rank=self.fed.svd_rank if light else None)
+        return self.spec.comm_bytes(self.server.params, self.server.theta,
+                                    svd_rank=self.fed.svd_rank)

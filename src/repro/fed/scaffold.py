@@ -1,98 +1,11 @@
-"""SCAFFOLD (Karimireddy et al. 2020) — first-order control-variate baseline.
+"""Compat shim: SCAFFOLD moved to ``repro.core.scaffold``.
 
-Per-client control variate c_i and server control c; local step
-  x <- x - lr (g - c_i + c)
-Option-II update  c_i' = c_i - c + (x0 - xK)/(K lr);
-server: c <- c + (S/N) mean_i (c_i' - c_i).
-
-The parameter/g_G server update delegates to the unified round engine
-(``core.engine.aggregate``); only the control-variate bookkeeping is
-SCAFFOLD-specific.  Persistent per-client state is kept stacked (N, ...) so
-cohorts index it with a gather — the state lives sharded over the mesh in
-distributed runs.
+The algorithm is now a registered ``AlgorithmSpec`` whose control variates
+are declared per-client state flowing through the engine's one round path —
+there is no SCAFFOLD-specific round function or runtime fork anymore.
+Importing this module (or ``repro.fed``) keeps ``ScaffoldState`` importable
+from its historical location.
 """
-from __future__ import annotations
-
-import dataclasses
-from typing import Any, Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.server import ServerState
-from repro.core.engine import (
-    AggregationConfig, ExecutorConfig, advance_server, aggregate,
-    make_cohort_executor,
+from repro.core.scaffold import (  # noqa: F401
+    SCAFFOLD_SPEC, ScaffoldState, make_scaffold_local_update,
 )
-
-
-@dataclasses.dataclass
-class ScaffoldState:
-    c_global: Any          # pytree like params (f32)
-    c_clients: Any         # pytree with leading N axis
-
-    @staticmethod
-    def init(params, n_clients: int):
-        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        stacked = jax.tree.map(
-            lambda p: jnp.zeros((n_clients, *p.shape), jnp.float32), params)
-        return ScaffoldState(zeros, stacked)
-
-
-def make_scaffold_round_fn(loss_fn, *, lr: float, local_steps: int,
-                           n_clients: int, server_lr: float = 1.0,
-                           executor: Optional[ExecutorConfig] = None):
-    agg_cfg = AggregationConfig(lr=lr, local_steps=local_steps,
-                                server_lr=server_lr, align=False)
-    cohort_exec = make_cohort_executor(executor)
-
-    @jax.jit
-    def round_fn(params, g_global, c_global, c_clients, cohort, batches):
-        def one_client(cid, batch_i):
-            c_i = jax.tree.map(lambda c: c[cid], c_clients)
-
-            def step(x, batch):
-                g = jax.grad(loss_fn)(x, batch)
-
-                def upd(p, gg, ci, c):
-                    d = gg.astype(jnp.float32) - ci + c
-                    return (p.astype(jnp.float32) - lr * d).astype(p.dtype)
-
-                x = jax.tree.map(upd, x, g, c_i, c_global)
-                return x, loss_fn(x, batch)
-
-            x_final, losses = jax.lax.scan(step, params, batch_i)
-            delta = jax.tree.map(
-                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-                x_final, params)
-            # Option II control-variate refresh
-            c_i_new = jax.tree.map(
-                lambda ci, c, d: ci - c - d / (local_steps * lr),
-                c_i, c_global, delta)
-            c_diff = jax.tree.map(lambda a, b: a - b, c_i_new, c_i)
-            return delta, c_i_new, c_diff, jnp.mean(losses)
-
-        deltas, c_i_new, c_diffs, losses = cohort_exec(
-            one_client, cohort, batches)
-        s = cohort.shape[0]
-        weights = jnp.ones((s,), jnp.float32)
-        new_params, _, new_g, _ = aggregate(
-            params, None, g_global, deltas, None, weights, agg_cfg)
-        new_c_global = jax.tree.map(
-            lambda c, cd: c + (s / n_clients) * jnp.mean(cd, axis=0),
-            c_global, c_diffs)
-        new_c_clients = jax.tree.map(
-            lambda all_c, upd: all_c.at[cohort].set(upd), c_clients, c_i_new)
-        return (new_params, new_c_global, new_c_clients, new_g,
-                jnp.mean(losses))
-
-    def driver(server: ServerState, state: ScaffoldState, cohort, batches,
-               rng):
-        p, cg, cc, g, loss = round_fn(server.params, server.g_global,
-                                      state.c_global, state.c_clients,
-                                      cohort, batches)
-        new_server = advance_server(server, p, None, g, aligned=False)
-        return new_server, ScaffoldState(cg, cc), {
-            "loss": loss, "drift": jnp.zeros(())}
-
-    return driver

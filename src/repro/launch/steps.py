@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.optim.api import LocalOptimizer
+from repro.core.algorithms import resolve
 from repro.core.client import LocalRunConfig, client_round
 from repro.core.engine import AggregationConfig, aggregate
 
@@ -72,14 +73,30 @@ def make_train_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
 def make_fed_round_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
                         beta: float = 0.5, clients: int = 8,
                         local_steps: int = 2, remat: bool = True,
-                        seq_shard: bool = False, batch_axes=("data",)):
+                        seq_shard: bool = False, batch_axes=("data",),
+                        algorithm=None):
     """Full FedPAC round: the global batch splits into ``clients`` cohorts of
     ``local_steps`` microbatches each; Theta/params aggregation lowers to
-    all-reduces over the client (data) axis."""
+    all-reduces over the client (data) axis.
+
+    ``algorithm`` (optional registered name or ``AlgorithmSpec``) supplies
+    the alignment policy, the beta policy (``beta`` is filtered through
+    ``spec.resolve_beta`` — a correct=False spec zeroes it, FedCM pins it),
+    and per-client mixing weights; the default is the historical FedPAC
+    configuration (align=True, uniform mixing, beta as given)."""
+    spec = resolve(algorithm) if algorithm is not None else None
+    align = spec.align if spec is not None else True
+    if spec is not None:
+        beta = spec.resolve_beta(beta)
+        if beta == "auto":
+            raise ValueError(
+                "beta='auto' needs the GeometryController round path "
+                "(fed runtimes) — pass a float beta to make_fed_round_step")
     loss_fn = make_loss_fn(cfg, remat=remat, seq_shard=seq_shard,
                            batch_axes=batch_axes)
-    run = LocalRunConfig(lr=lr, local_steps=local_steps, beta=beta, align=True)
-    agg_cfg = AggregationConfig(lr=lr, local_steps=local_steps, align=True)
+    run = LocalRunConfig(lr=lr, local_steps=local_steps, beta=beta,
+                         align=align)
+    agg_cfg = AggregationConfig(lr=lr, local_steps=local_steps, align=align)
 
     def fed_round(params, theta, g_global, batch, rng):
         def split(x):  # (B, ...) -> (C, K, B/(C*K), ...)
@@ -92,9 +109,12 @@ def make_fed_round_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
         deltas, thetas, losses = jax.vmap(
             lambda bi, ki: client_round(loss_fn, opt, run, params, theta,
                                         g_global, bi, ki))(batches, keys)
+        if spec is not None and spec.mixing is not None:
+            weights = spec.mixing(deltas, thetas)
+        else:
+            weights = jnp.ones((clients,), jnp.float32)
         new_params, new_theta, new_g, _ = aggregate(
-            params, theta, g_global, deltas, thetas,
-            jnp.ones((clients,), jnp.float32), agg_cfg)
+            params, theta, g_global, deltas, thetas, weights, agg_cfg)
         return new_params, new_theta, new_g, jnp.mean(losses)
 
     return fed_round

@@ -15,6 +15,11 @@ def make(name: str, **kw) -> LocalOptimizer:
     return _FACTORIES[name](**kw)
 
 
+def available() -> tuple:
+    """Sorted optimizer names ``make`` accepts (AlgorithmSpec validation)."""
+    return tuple(sorted(_FACTORIES))
+
+
 DEFAULT_LR = {  # paper's Appendix Table 8 defaults
     "sgd": 0.1,
     "adamw": 3e-4,

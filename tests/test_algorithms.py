@@ -1,0 +1,390 @@
+"""AlgorithmSpec registry + unified client-state protocol + builder API.
+
+Covers: registry error cases (duplicate, unknown), the derived *_light
+variants, the fedcm_light beta=0.9 regression, the golden legacy-string
+equivalence suite (every paper-table algorithm string produces bitwise-
+identical round outputs through the spec API, sync and async), the
+SCAFFOLD client-state protocol through the uniform round path, the
+FedPM-style preconditioned-mixing extension, and the FedExperiment ABC
+contract (config/rounds + log_round hook).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.api import build_experiment
+from repro.core import init_server
+from repro.core.algorithms import (
+    AlgorithmSpec, ClientStateSpec, DuplicateAlgorithmError,
+    UnknownAlgorithmError, build_round_fn, register, registered, resolve,
+)
+from repro.core.engine.aggregation import precond_mixing_weights
+from repro.fed import (
+    AsyncConfig, AsyncFederatedExperiment, FedConfig, FedExperiment,
+    FederatedExperiment, LatencyModel,
+)
+
+N_CLIENTS, D, OUT, K = 4, 12, 8, 2   # w (12, 8): inside SOAP's matrix domain
+_KEY = jax.random.key(0)
+_W = jax.random.normal(_KEY, (D, OUT))
+_XS = np.asarray(jax.random.normal(jax.random.key(1),
+                                   (N_CLIENTS, 64, D))) @ np.asarray(_W.T.T)
+
+
+def _problem():
+    """Tiny linear regression, one shard per client (fast on CPU)."""
+    params = {"w": jnp.zeros((D, OUT))}
+    X = np.asarray(jax.random.normal(jax.random.key(1),
+                                     (N_CLIENTS, 64, D)), np.float32)
+    Y = X @ np.asarray(_W, np.float32)
+
+    def loss_fn(p, b):
+        xb, yb = b
+        return jnp.mean((xb @ p["w"] - yb) ** 2)
+
+    def batch_fn(cid, rng):
+        idx = rng.choice(64, size=8, replace=True)
+        return jnp.asarray(X[cid, idx]), jnp.asarray(Y[cid, idx])
+
+    return params, loss_fn, batch_fn
+
+
+def _fed(algo, **kw):
+    defaults = dict(algorithm=algo, n_clients=N_CLIENTS, participation=0.5,
+                    rounds=2, local_steps=K, svd_rank=2, seed=0)
+    defaults.update(kw)
+    return FedConfig(**defaults)
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_unknown_name():
+    for name in ["bogus", "local_bogus", "fedpac_", "adamw", "bogus_light"]:
+        with pytest.raises(UnknownAlgorithmError, match="unknown"):
+            resolve(name)
+
+
+def test_registry_duplicate_rejected():
+    with pytest.raises(DuplicateAlgorithmError, match="already registered"):
+        register(AlgorithmSpec(name="fedavg", optimizer="sgd"))
+    # overwrite is explicit, and restores cleanly
+    original = resolve("fedavg")
+    register(original, overwrite=True)
+    assert resolve("fedavg") is original
+
+
+def test_registry_rejects_unknown_optimizer_and_upload():
+    with pytest.raises(ValueError, match="unknown optimizer"):
+        register(AlgorithmSpec(name="tmp_x", optimizer="bogus"))
+    with pytest.raises(ValueError, match="upload"):
+        AlgorithmSpec(name="tmp_y", upload="gzip")
+
+
+def test_registry_contains_paper_table():
+    names = registered()
+    for name in ["fedavg", "scaffold", "fedcm", "local_soap", "fedpac_soap",
+                 "align_only_soap", "correct_only_muon", "fedpm_soap"]:
+        assert name in names
+
+
+def test_light_variant_is_derived():
+    base = resolve("fedpac_soap")
+    light = resolve("fedpac_soap_light")
+    assert light.upload == "svd" and base.upload == "dense"
+    assert light.name == "fedpac_soap_light"
+    # everything else (incl. the beta policy) is inherited
+    assert (light.align, light.correct, light.optimizer) == \
+        (base.align, base.correct, base.optimizer)
+
+
+# ------------------------------------------------------- beta policy (bugfix)
+
+def test_fedcm_light_keeps_pinned_beta():
+    """Regression: the legacy resolve_beta tested algorithm == 'fedcm', so
+    fedcm_light silently fell back to the default beta — the pin is now part
+    of the spec and survives derived variants."""
+    assert resolve("fedcm").resolve_beta(0.5) == 0.9
+    assert resolve("fedcm_light").resolve_beta(0.5) == 0.9
+    assert resolve("fedcm_light").resolve_beta("auto") == 0.9
+
+    params, loss_fn, batch_fn = _problem()
+    for runtime_kw in [dict(), dict(runtime="async")]:
+        exp = build_experiment("fedcm_light", params=params, loss_fn=loss_fn,
+                               client_batch_fn=batch_fn,
+                               fed=_fed("fedcm_light", **runtime_kw))
+        assert float(exp.server.geom.beta) == pytest.approx(0.9)
+
+
+def test_beta_policy_matrix():
+    assert resolve("fedavg").resolve_beta(0.5) == 0.0       # no correction
+    assert resolve("fedpac_soap").resolve_beta(0.25) == 0.25
+    assert resolve("fedpac_soap").resolve_beta("auto") == "auto"
+    assert resolve("align_only_soap").resolve_beta("auto") == 0.0
+
+
+# ------------------------------------------------- golden legacy equivalence
+
+TABLE_ALGOS = ["fedavg", "scaffold", "fedcm", "fedcm_light", "local_adamw",
+               "local_sophia", "local_muon", "local_soap", "fedpac_sophia",
+               "fedpac_muon", "fedpac_soap", "fedpac_soap_light",
+               "align_only_soap", "correct_only_muon"]
+
+
+def _history(exp):
+    return [[(k, v) for k, v in sorted(rec.items())] for rec in exp.run()]
+
+
+@pytest.mark.parametrize("algo", TABLE_ALGOS)
+def test_legacy_string_equivalence_sync(algo):
+    """Legacy string -> spec resolution is golden: the string path and the
+    explicit-spec path produce bitwise-identical round outputs."""
+    params, loss_fn, batch_fn = _problem()
+    via_string = FederatedExperiment(_fed(algo), params, loss_fn, batch_fn)
+    via_spec = build_experiment(resolve(algo), params=params, loss_fn=loss_fn,
+                                client_batch_fn=batch_fn, fed=_fed(algo))
+    h_string, h_spec = _history(via_string), _history(via_spec)
+    assert h_string == h_spec          # exact float equality, every metric
+    assert via_string.comm_bytes_per_round() == \
+        via_spec.comm_bytes_per_round()
+    for a, b in zip(jax.tree.leaves(via_string.server.params),
+                    jax.tree.leaves(via_spec.server.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("algo", [a for a in TABLE_ALGOS if a != "scaffold"])
+def test_legacy_string_equivalence_async(algo):
+    params, loss_fn, batch_fn = _problem()
+
+    def acfg():
+        return AsyncConfig(buffer_size=2, concurrency=3,
+                           latency=LatencyModel(heterogeneity=1.0))
+
+    fed = _fed(algo, runtime="async")
+    via_string = AsyncFederatedExperiment(fed, params, loss_fn, batch_fn,
+                                          async_cfg=acfg())
+    via_spec = build_experiment(resolve(algo), params=params, loss_fn=loss_fn,
+                                client_batch_fn=batch_fn, async_cfg=acfg(),
+                                fed=fed)
+    assert _history(via_string) == _history(via_spec)
+
+
+# ------------------------------------------------------ client-state protocol
+
+def test_async_rejects_client_state_algorithms_generically():
+    params, loss_fn, batch_fn = _problem()
+    with pytest.raises(ValueError, match="per-client persistent state"):
+        AsyncFederatedExperiment(_fed("scaffold", runtime="async"), params,
+                                 loss_fn, batch_fn)
+
+
+def test_scaffold_uniform_round_signature():
+    """SCAFFOLD runs through the same driver signature as every algorithm:
+    (server, client_state, cohort, batches, rng) -> 3-tuple."""
+    params, loss_fn, batch_fn = _problem()
+    exp = FederatedExperiment(_fed("scaffold", participation=0.5), params,
+                              loss_fn, batch_fn)
+    assert exp.client_state is not None
+    c_before = np.asarray(jax.tree.leaves(exp.client_state.c_clients)[0])
+    exp.run_round()
+    c_after = np.asarray(jax.tree.leaves(exp.client_state.c_clients)[0])
+    moved = np.any(c_before != c_after, axis=tuple(range(1, c_after.ndim)))
+    assert moved.sum() == 2            # exactly the sampled cohort updated
+    # global control moved too (partial participation => scaled by S/N)
+    assert np.any(np.asarray(
+        jax.tree.leaves(exp.client_state.c_global)[0]) != 0.0)
+
+
+def test_custom_client_state_through_registry():
+    """A brand-new stateful algorithm needs only a spec — no runtime edits.
+
+    Declares a per-client step counter as persistent state and checks the
+    engine gathers/scatters it by cohort."""
+    params, loss_fn, batch_fn = _problem()
+
+    def local_update(spec, lf, opt, run):
+        from repro.core.algorithms import make_local_update
+        base = make_local_update(dataclasses.replace(
+            spec, local_update=None, client_state=None), lf, opt, run)
+
+        def fn(p, theta, g, *, beta, view, batch_i, key_i):
+            delta, theta_out, _, loss = base(p, theta, g, beta=beta,
+                                             view=None, batch_i=batch_i,
+                                             key_i=key_i)
+            return delta, theta_out, view + 1, loss
+
+        return fn
+
+    state = ClientStateSpec(
+        init=lambda p, n: jnp.zeros((n,), jnp.int32),
+        client_view=lambda s, cid: s[cid],
+        server_update=lambda s, cohort, outs, n: s.at[cohort].set(outs))
+    spec = AlgorithmSpec(name="counting_sgd", optimizer="sgd",
+                         local_update=local_update, client_state=state)
+    exp = build_experiment(spec, params=params, loss_fn=loss_fn,
+                           client_batch_fn=batch_fn,
+                           fed=_fed("fedavg", participation=1.0, rounds=3))
+    exp.run()
+    # full participation, 3 rounds: every client's counter gathered,
+    # incremented, and scattered back exactly 3 times
+    np.testing.assert_array_equal(np.asarray(exp.client_state),
+                                  np.full((N_CLIENTS,), 3))
+
+
+# --------------------------------------------------- preconditioned mixing
+
+def test_precond_mixing_weights_normalized():
+    thetas = {"q": jnp.stack([jnp.full((3, 3), 1.0), jnp.full((3, 3), 4.0)])}
+    w = precond_mixing_weights(None, thetas)
+    assert w.shape == (2,)
+    assert float(jnp.mean(w)) == pytest.approx(1.0, rel=1e-5)
+    assert float(w[0]) > float(w[1])   # sharper curvature => less trust
+    uniform = precond_mixing_weights(
+        None, {"q": jnp.ones((2, 3, 3))})
+    np.testing.assert_allclose(np.asarray(uniform), 1.0, rtol=1e-5)
+    with pytest.raises(ValueError, match="Theta"):
+        precond_mixing_weights(None, {"m": None})
+
+
+def test_fedpm_runs_without_runtime_changes():
+    """The extension algorithm registered purely through the registry runs
+    end-to-end in both runtimes and actually reweights the delta mean."""
+    params, loss_fn, batch_fn = _problem()
+    exp = build_experiment("fedpm_soap", params=params, loss_fn=loss_fn,
+                           client_batch_fn=batch_fn, fed=_fed("fedpm_soap"))
+    hist = exp.run()
+    assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
+    assert exp.spec.mixing is precond_mixing_weights
+
+    acfg = AsyncConfig(buffer_size=2, concurrency=3)
+    a = build_experiment("fedpm_soap", params=params, loss_fn=loss_fn,
+                         client_batch_fn=batch_fn, async_cfg=acfg,
+                         fed=_fed("fedpm_soap", runtime="async"))
+    ahist = a.run()
+    assert len(ahist) == 2 and np.isfinite(ahist[-1]["loss"])
+
+
+def test_fedpm_differs_from_uniform_fedsoa_aligned():
+    """Same optimizer/alignment, uniform vs curvature-weighted mixing must
+    diverge once client curvatures differ."""
+    params, loss_fn, batch_fn = _problem()
+    mixed = build_experiment("fedpm_soap", params=params, loss_fn=loss_fn,
+                             client_batch_fn=batch_fn,
+                             fed=_fed("fedpm_soap"))
+    uniform = build_experiment("align_only_soap", params=params,
+                               loss_fn=loss_fn, client_batch_fn=batch_fn,
+                               fed=_fed("align_only_soap"))
+    hm, hu = mixed.run(), uniform.run()
+    pm = np.asarray(mixed.server.params["w"])
+    pu = np.asarray(uniform.server.params["w"])
+    assert hm[-1]["loss"] != hu[-1]["loss"] or np.any(pm != pu)
+
+
+# ------------------------------------------------------------- builder + ABC
+
+def test_scaffold_keeps_historical_default_lr():
+    """The legacy parser's 'scaffold' token bypassed SGD's table lr; the
+    spec pins default_lr=1e-2 so default runs reproduce the old numerics."""
+    params, loss_fn, batch_fn = _problem()
+    exp = FederatedExperiment(_fed("scaffold"), params, loss_fn, batch_fn)
+    assert exp.lr == pytest.approx(1e-2)
+    # explicit lr still wins
+    exp2 = FederatedExperiment(_fed("scaffold", lr=0.05), params, loss_fn,
+                               batch_fn)
+    assert exp2.lr == 0.05
+    assert FederatedExperiment(_fed("fedavg"), params, loss_fn,
+                               batch_fn).lr == optim.DEFAULT_LR["sgd"]
+
+
+def test_fed_round_step_honors_spec_beta_policy():
+    from repro.launch.steps import make_fed_round_step
+    with pytest.raises(ValueError, match="auto"):
+        make_fed_round_step(None, optim.make("soap"), lr=0.1,
+                            algorithm="fedpac_soap", beta="auto")
+
+
+def test_build_experiment_dispatch_and_conflicts():
+    params, loss_fn, batch_fn = _problem()
+    sync = build_experiment("fedavg", params=params, loss_fn=loss_fn,
+                            client_batch_fn=batch_fn, rounds=1)
+    assert isinstance(sync, FederatedExperiment)
+    # async_cfg implies the async runtime without naming it
+    auto = build_experiment("fedavg", params=params, loss_fn=loss_fn,
+                            client_batch_fn=batch_fn, rounds=1,
+                            async_cfg=AsyncConfig(buffer_size=2,
+                                                  concurrency=3))
+    assert isinstance(auto, AsyncFederatedExperiment)
+    with pytest.raises(ValueError, match="async_cfg"):
+        build_experiment("fedavg", params=params, loss_fn=loss_fn,
+                         client_batch_fn=batch_fn, runtime="sync",
+                         async_cfg=AsyncConfig())
+    # an explicit fed config is authoritative: sync + async_cfg is an
+    # error, never a silent flip to the async runtime
+    with pytest.raises(ValueError, match="async_cfg"):
+        build_experiment("fedavg", params=params, loss_fn=loss_fn,
+                         client_batch_fn=batch_fn,
+                         fed=FedConfig(runtime="sync"),
+                         async_cfg=AsyncConfig())
+    with pytest.raises(UnknownAlgorithmError):
+        build_experiment("bogus", params=params, loss_fn=loss_fn,
+                         client_batch_fn=batch_fn)
+
+
+def test_unregistered_spec_usable_directly():
+    params, loss_fn, batch_fn = _problem()
+    spec = AlgorithmSpec(name="my_unregistered", optimizer="soap",
+                         align=True, correct=True, pinned_beta=0.3)
+    exp = build_experiment(spec, params=params, loss_fn=loss_fn,
+                           client_batch_fn=batch_fn, rounds=1,
+                           n_clients=N_CLIENTS, local_steps=K)
+    assert float(exp.server.geom.beta) == pytest.approx(0.3)
+    assert np.isfinite(exp.run()[-1]["loss"])
+
+
+def test_fed_experiment_declares_rounds_contract():
+    params, loss_fn, batch_fn = _problem()
+    with pytest.raises(TypeError, match="rounds"):
+        FederatedExperiment(object(), params, loss_fn, batch_fn)
+
+
+def test_log_round_hook_routes_logging():
+    params, loss_fn, batch_fn = _problem()
+    seen = []
+
+    class Hooked(FederatedExperiment):
+        def log_round(self, rec, r):
+            seen.append((r, rec["round"]))
+
+    exp = Hooked(_fed("fedavg", rounds=3), params, loss_fn, batch_fn)
+    exp.run(log_every=1)
+    assert seen == [(0, 1.0), (1, 2.0), (2, 3.0)]
+    assert isinstance(exp, FedExperiment)
+
+
+def test_build_round_fn_requires_n_clients_for_stateful():
+    params, loss_fn, _ = _problem()
+    with pytest.raises(ValueError, match="n_clients"):
+        build_round_fn(resolve("scaffold"), loss_fn, optim.make("sgd"),
+                       lr=0.1, local_steps=K)
+
+
+def test_inline_spec_round_fn_matches_registered():
+    """core.fedpac.make_round_fn (inline spec) == registry spec driver."""
+    from repro.core import make_round_fn
+    params, loss_fn, _ = _problem()
+    opt = optim.make("soap")
+    X = jax.random.normal(jax.random.key(5), (N_CLIENTS, K, 8, D))
+    batches = (X, X @ _W)
+    rng = jax.random.key(6)
+    rf = make_round_fn(loss_fn, opt, lr=0.05, local_steps=K, beta=0.5)
+    s_inline, m_inline = rf(init_server(params, opt), batches, rng)
+    driver = build_round_fn(resolve("fedpac_soap"), loss_fn, opt, lr=0.05,
+                            local_steps=K, beta=0.5)
+    s_spec, _, m_spec = driver(init_server(params, opt), None,
+                               jnp.arange(N_CLIENTS), batches, rng)
+    np.testing.assert_array_equal(np.asarray(s_inline.params["w"]),
+                                  np.asarray(s_spec.params["w"]))
+    assert float(m_inline["loss"]) == float(m_spec["loss"])

@@ -34,7 +34,7 @@ def problem():
 ALGOS = ["fedavg", "scaffold", "fedcm", "local_adamw", "local_sophia",
          "local_muon", "local_soap", "fedpac_sophia", "fedpac_muon",
          "fedpac_soap", "fedpac_soap_light", "align_only_soap",
-         "correct_only_muon"]
+         "correct_only_muon", "fedpm_soap"]
 
 
 @pytest.mark.parametrize("algo", ALGOS)
@@ -59,14 +59,16 @@ def test_parse_algorithm():
 
 
 def test_scaffold_state_updates(problem):
+    """SCAFFOLD's control variates live in the unified client_state slot."""
     params, loss_fn, batch_fn = problem
     fed = FedConfig(algorithm="scaffold", n_clients=N_CLIENTS,
                     participation=1.0, rounds=1, local_steps=3)
     exp = FederatedExperiment(fed, params, loss_fn, batch_fn)
-    c0 = jax.tree.leaves(exp.scaffold_state.c_clients)[0].copy()
+    c0 = jax.tree.leaves(exp.client_state.c_clients)[0].copy()
     exp.run()
-    c1 = jax.tree.leaves(exp.scaffold_state.c_clients)[0]
+    c1 = jax.tree.leaves(exp.client_state.c_clients)[0]
     assert bool(jnp.any(c0 != c1))  # control variates moved
+    assert exp.spec.client_state is not None  # declared, not special-cased
 
 
 def test_fedpac_comm_cost_exceeds_local(problem):
