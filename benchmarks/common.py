@@ -89,13 +89,15 @@ VISION_LRS = {"sophia": 2e-2}
 
 def run_algorithm(algo: str, params, loss_fn, batch_fn, eval_fn, *,
                   n_clients=10, participation=0.5, rounds=20, local_steps=5,
-                  lr=None, beta=0.5, seed=0, svd_rank=8):
+                  lr=None, beta=0.5, seed=0, svd_rank=8, theta_codec=None,
+                  delta_codec=None, error_feedback=True):
     if lr is None and "sophia" in algo:
         lr = VISION_LRS["sophia"]
     fed = FedConfig(algorithm=algo, n_clients=n_clients,
                     participation=participation, rounds=rounds,
                     local_steps=local_steps, lr=lr, beta=beta, seed=seed,
-                    svd_rank=svd_rank)
+                    svd_rank=svd_rank, theta_codec=theta_codec,
+                    delta_codec=delta_codec, error_feedback=error_feedback)
     exp = build_experiment(algo, params=params, loss_fn=loss_fn,
                            client_batch_fn=batch_fn, eval_fn=eval_fn, fed=fed)
     t0 = time.perf_counter()

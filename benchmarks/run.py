@@ -19,14 +19,15 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table1_vit,fig3,"
                          "table3,table4,table5,table6,async_drift,"
-                         "exec_scaling")
+                         "exec_scaling,transport")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (table1_noniid, fig3_drift, table3_llm,
                             table4_beta, table5_ablation, table6_comm,
-                            seed_robustness, async_drift, executor_scaling)
+                            seed_robustness, async_drift, executor_scaling,
+                            transport_bench)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
@@ -41,6 +42,7 @@ def main(argv=None):
         ("table6", lambda: table6_comm.run(quick=quick)),
         ("async_drift", lambda: async_drift.run(quick=quick)),
         ("exec_scaling", lambda: executor_scaling.run(quick=quick)),
+        ("transport", lambda: transport_bench.run(quick=quick)),
         ("robust", lambda: seed_robustness.run(quick=quick)),
     ]
     failures = 0

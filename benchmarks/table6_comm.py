@@ -1,7 +1,13 @@
 """Table 6 / 11 reproduction: per-round communication & compute cost across
 aggregation strategies, incl. the SVD-compressed FedPAC_light upload.
 Claims: FedPAC costs |x| + c|Theta|; _light stays within ~1.1-1.3x of Local
-while keeping most of the accuracy gain."""
+while keeping most of the accuracy gain.
+
+Byte counts come from ``comm_bytes_per_round``, which measures the wire
+messages the geometry transport actually encodes (``transport.wire_bytes``)
+— the factored U·s·Vᵀ payload for _light, not an analytic formula.  See
+benchmarks/transport_bench.py for the full codec x rank x quantization
+sweep."""
 from __future__ import annotations
 
 from benchmarks.common import make_fed_vision_problem, run_algorithm, emit

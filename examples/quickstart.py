@@ -1,7 +1,10 @@
 """Quickstart: FedPAC in ~40 lines, via the public builder API.
 
 Federated CIFAR-like classification on non-IID clients: compare Local SOAP
-(Alg. 1, drifting preconditioners) against FedPAC_SOAP (Alg. 2).
+(Alg. 1, drifting preconditioners) against FedPAC_SOAP (Alg. 2) and its
+bandwidth-light variant (rank-8 factored Theta on the wire — the reported
+MB/round is measured from the encoded wire messages, see
+``repro.core.transport``).
 
   PYTHONPATH=src python examples/quickstart.py
 
@@ -38,8 +41,8 @@ def batch_fn(cid, rng):
     idx = rng.choice(parts[cid], size=16)
     return {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
 
-# --- run both algorithms ---------------------------------------------------
-for algo in ["local_soap", "fedpac_soap"]:
+# --- run the algorithms ----------------------------------------------------
+for algo in ["local_soap", "fedpac_soap", "fedpac_soap_light"]:
     exp = build_experiment(algo, params=params, loss_fn=loss_fn,
                            client_batch_fn=batch_fn, eval_fn=eval_fn,
                            n_clients=10, participation=0.5, rounds=ROUNDS,

@@ -9,9 +9,14 @@ from repro.core.engine import (
     weighted_client_mean,
 )
 from repro.core.algorithms import (
-    AlgorithmSpec, ClientStateSpec, DuplicateAlgorithmError,
-    UnknownAlgorithmError, build_round_fn, make_local_update, register,
-    registered, resolve, zero_theta,
+    AlgorithmSpec, ClientStateSpec, DuplicateAlgorithmError, EF_STATE,
+    UnknownAlgorithmError, build_round_fn, init_round_client_state,
+    make_local_update, register, registered, resolve,
+    round_client_state_spec, zero_theta,
+)
+from repro.core.transport import (
+    Codec, Transport, TransportConfig, UnknownCodecError, WireMsg,
+    registered_codecs, resolve_codec, wire_bytes,
 )
 from repro.core.scaffold import ScaffoldState
 from repro.core.fedpac import make_round_fn

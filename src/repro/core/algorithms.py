@@ -35,15 +35,13 @@ import jax.numpy as jnp
 
 from repro import optim
 from repro.core.client import LocalRunConfig, client_round
-from repro.core.compression import make_svd_codec, round_comm_bytes
 from repro.core.engine import (
     AggregationConfig, BETA_MAX_AUTO, ExecutorConfig, advance_server,
     aggregate, make_cohort_executor, make_controller, update_controller,
 )
 from repro.core.server import ServerState
+from repro.core import transport as T
 from repro.optim.api import LocalOptimizer
-
-UPLOADS = ("dense", "svd")
 
 
 class UnknownAlgorithmError(ValueError):
@@ -95,7 +93,9 @@ class AlgorithmSpec:
     align: bool = False
     correct: bool = False
     pinned_beta: Optional[float] = None
-    upload: str = "dense"               # "dense" | "svd" (*_light variants)
+    upload: str = "dense"               # Theta codec spec (transport registry;
+    #                                     "svd" is the legacy lowrank alias)
+    delta_upload: str = "dense"         # delta codec spec (transport registry)
     local_update: Optional[Callable] = None
     client_state: Optional[ClientStateSpec] = None
     mixing: Optional[Callable] = None
@@ -103,10 +103,8 @@ class AlgorithmSpec:
     description: str = ""
 
     def __post_init__(self):
-        if self.upload not in UPLOADS:
-            raise ValueError(
-                f"unknown upload codec {self.upload!r} "
-                f"(want one of {UPLOADS})")
+        T.validate_codec_spec(self.upload)
+        T.validate_codec_spec(self.delta_upload)
 
     # ------------------------------------------------------------ policies
 
@@ -124,9 +122,27 @@ class AlgorithmSpec:
     def make_optimizer(self, **opt_kwargs) -> LocalOptimizer:
         return optim.make(self.optimizer, **opt_kwargs)
 
-    def make_codec(self, svd_rank: int) -> Optional[Callable]:
-        """Upload codec for Theta (None: dense upload)."""
-        return make_svd_codec(svd_rank) if self.upload == "svd" else None
+    def make_transport(self, *, rank: int = 8, block: int = 128,
+                       sketch_iters: int = 2, delta_codec=None,
+                       theta_codec=None, error_feedback: bool = True,
+                       use_pallas: bool = False,
+                       interpret: Optional[bool] = None) -> T.Transport:
+        """Resolve this spec's wire policy (``delta_codec``/``theta_codec``
+        override the spec's declared codec specs, e.g. from FedConfig).
+        ``interpret=None`` picks Pallas interpret mode automatically: real
+        kernels on TPU, interpreter everywhere else."""
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        cfg = T.TransportConfig(rank=rank, block=block,
+                                sketch_iters=sketch_iters,
+                                use_pallas=use_pallas, interpret=interpret)
+        return T.Transport(
+            delta=T.resolve_codec(
+                self.delta_upload if delta_codec is None else delta_codec,
+                cfg),
+            theta=T.resolve_codec(
+                self.upload if theta_codec is None else theta_codec, cfg),
+            error_feedback=error_feedback)
 
     def init_client_state(self, params, n_clients: int):
         """Fresh persistent state (None for stateless algorithms)."""
@@ -136,10 +152,12 @@ class AlgorithmSpec:
 
     def comm_bytes(self, params, theta, *, svd_rank: Optional[int] = None
                    ) -> int:
-        """Per-client upload bytes for one round (Table 6 accounting)."""
-        return round_comm_bytes(
-            params, theta if self.align else None,
-            compressed_rank=svd_rank if self.upload == "svd" else None)
+        """Per-client upload bytes for one round (Table 6 accounting).
+
+        Deprecated shim: measured from the wire messages this spec's
+        default transport encodes (``transport.wire_bytes``)."""
+        transport = self.make_transport(rank=svd_rank or 8)
+        return transport.round_bytes(params, theta if self.align else None)
 
     # ------------------------------------------------------------ variants
 
@@ -240,6 +258,50 @@ def make_local_update(spec: AlgorithmSpec, loss_fn: Callable,
     return local_fn
 
 
+# error-feedback residuals, declared through the same per-client state
+# protocol as algorithm state (SCAFFOLD's variates): the engine gathers the
+# cohort's residuals inside jit and scatters the refreshed ones back.
+EF_STATE = ClientStateSpec(init=T.ef_init, client_view=T.ef_view,
+                           server_update=lambda s, cohort, outs, n:
+                           T.ef_scatter(s, cohort, outs))
+
+
+def _compose_state_specs(algo: ClientStateSpec,
+                         ef: ClientStateSpec) -> ClientStateSpec:
+    """Pair algorithm state with transport (EF) state: one protocol, two
+    independently-threaded slots."""
+    return ClientStateSpec(
+        init=lambda p, n: (algo.init(p, n), ef.init(p, n)),
+        client_view=lambda s, cid: (algo.client_view(s[0], cid),
+                                    ef.client_view(s[1], cid)),
+        server_update=lambda s, cohort, outs, n: (
+            algo.server_update(s[0], cohort, outs[0], n),
+            ef.server_update(s[1], cohort, outs[1], n)))
+
+
+def round_client_state_spec(spec: AlgorithmSpec,
+                            transport: Optional[T.Transport] = None
+                            ) -> Optional[ClientStateSpec]:
+    """The full per-client state protocol of one run: the algorithm's
+    declared state, the transport's error-feedback residuals (lossy delta
+    codec only), their composition, or None."""
+    ef = EF_STATE if (transport is not None
+                      and transport.feedback_active) else None
+    algo = spec.client_state
+    if ef is None:
+        return algo
+    if algo is None:
+        return ef
+    return _compose_state_specs(algo, ef)
+
+
+def init_round_client_state(spec: AlgorithmSpec, transport, params,
+                            n_clients: int):
+    """Fresh state matching ``round_client_state_spec`` (None if stateless)."""
+    proto = round_client_state_spec(spec, transport)
+    return proto.init(params, n_clients) if proto is not None else None
+
+
 def build_round_fn(
     spec: AlgorithmSpec,
     loss_fn: Callable,
@@ -251,6 +313,7 @@ def build_round_fn(
     hessian_freq: int = 10,
     server_lr: float = 1.0,
     compress_fn: Optional[Callable] = None,
+    transport: Optional[T.Transport] = None,
     beta_max: float = BETA_MAX_AUTO,
     drift_ema: float = 1.0,
     executor: Optional[ExecutorConfig] = None,
@@ -264,12 +327,26 @@ def build_round_fn(
     use (``client_state`` is None for stateless algorithms).  batches carry
     leading (S, K, ...) axes; ``cohort`` is the (S,) array of client ids
     (persistent state is gathered/scattered by it inside jit).
+
+    ``transport`` routes the uploads through wire-true codecs: each client
+    encodes its delta (error-compensated for lossy codecs) and, for
+    aligned algorithms, its Theta; the server decodes the stacked wire
+    messages before aggregation and reports the measured ``upload_bytes``.
+    ``compress_fn`` is the legacy stacked Theta round-trip (exclusive with
+    ``transport``); None for both is the plain dense path.
     """
-    state_proto = spec.client_state
+    if transport is not None and compress_fn is not None:
+        raise ValueError("pass either transport or the legacy compress_fn, "
+                         "not both")
+    state_proto = round_client_state_spec(spec, transport)
+    ef_active = transport is not None and transport.feedback_active
+    has_algo_state = spec.client_state is not None
     if state_proto is not None and n_clients is None:
         raise ValueError(
-            f"algorithm {spec.name!r} declares per-client state; "
+            f"algorithm {spec.name!r} carries per-client state "
+            f"({'error-feedback residuals' if not has_algo_state else 'declared algorithm state'}); "
             "build_round_fn needs n_clients")
+    encode_theta = transport is not None and spec.align
     default_ctrl = make_controller(beta, correct=spec.correct,
                                    beta_max=beta_max, ema=drift_ema)
     run = LocalRunConfig(lr=lr, local_steps=local_steps, beta=0.0,
@@ -278,6 +355,10 @@ def build_round_fn(
                                 server_lr=server_lr, align=spec.align)
     cohort_exec = make_cohort_executor(executor)
     local_fn = make_local_update(spec, loss_fn, opt, run)
+    # wire accounting is static shape math: captured at trace time and
+    # reported host-side as an exact int (f32 metrics would round above
+    # 2^24 bytes)
+    wire_cell = {}
 
     def round_fn(params, theta, g_global, ctrl, cstate, cohort, batches, rng):
         s = jax.tree.leaves(batches)[0].shape[0]
@@ -286,14 +367,48 @@ def build_round_fn(
         def one_client(cid, batch_i, key_i):
             view = (state_proto.client_view(cstate, cid)
                     if state_proto is not None else None)
-            return local_fn(params, theta, g_global, beta=ctrl.beta,
-                            view=view, batch_i=batch_i, key_i=key_i)
+            if ef_active:
+                algo_view, residual = view if has_algo_state else (None, view)
+            else:
+                algo_view, residual = view, None
+            delta, theta_out, algo_out, loss = local_fn(
+                params, theta, g_global, beta=ctrl.beta, view=algo_view,
+                batch_i=batch_i, key_i=key_i)
+            if transport is None:
+                return delta, theta_out, algo_out, loss
+            # client-side encode: what leaves the client IS the wire msg;
+            # under EF the decode needed for the residual doubles as the
+            # server-side reconstruction (no second decode pass)
+            dmsg, decoded, new_residual = T.encode_with_feedback(
+                transport.delta, delta, residual)
+            dchan = (dmsg, decoded) if ef_active else dmsg
+            tmsg = (transport.theta.encode(theta_out) if encode_theta
+                    else theta_out)
+            if ef_active:
+                out = ((algo_out, new_residual) if has_algo_state
+                       else new_residual)
+            else:
+                out = algo_out
+            return dchan, tmsg, out, loss
 
         deltas, thetas, outs, losses = cohort_exec(
             one_client, cohort, batches, keys)
-        if compress_fn is not None and thetas is not None:
-            # Clients upload compressed Theta; server aggregates the decoded
-            # reconstruction (accuracy/bandwidth trade-off of Table 6).
+        if transport is not None:
+            # server-side decode of the stacked wire messages; byte counts
+            # are static shape math over those same structures
+            if ef_active:
+                dmsgs, deltas = deltas
+                up_bytes = T.wire_bytes(dmsgs)
+            else:
+                up_bytes = T.wire_bytes(deltas)
+                deltas = jax.vmap(transport.delta.decode)(deltas)
+            if encode_theta:
+                up_bytes += T.wire_bytes(thetas)
+                thetas = jax.vmap(transport.theta.decode)(thetas)
+            wire_cell["per_client"] = up_bytes // s
+        elif compress_fn is not None and thetas is not None:
+            # legacy path: clients upload compressed Theta; server
+            # aggregates the decoded reconstruction (Table 6 trade-off)
             thetas = compress_fn(thetas)
         if spec.mixing is not None:
             weights = spec.mixing(deltas, thetas)
@@ -321,6 +436,10 @@ def build_round_fn(
         p, th, g, new_ctrl, new_cstate, metrics = round_fn(
             server.params, theta, server.g_global, ctrl, cstate, cohort,
             batches, rng)
+        if transport is not None:
+            # exact host-side int captured at trace time (never a lossy
+            # f32 device scalar)
+            metrics = dict(metrics, upload_bytes=wire_cell["per_client"])
         new_server = advance_server(server, p, th, g, geom=new_ctrl,
                                     aligned=spec.align)
         return new_server, new_cstate, metrics

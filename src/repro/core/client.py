@@ -24,6 +24,18 @@ class LocalRunConfig:
     hessian_freq: int = 10     # Sophia's f_h
     align: bool = True         # warm-start Theta from the global reference
 
+    def __post_init__(self):
+        # validate eagerly: hessian_freq=0 would only surface as a cryptic
+        # `k % 0` ZeroDivisionError deep inside the jitted scan below
+        if self.local_steps < 1:
+            raise ValueError(
+                f"local_steps must be >= 1, got {self.local_steps}")
+        if self.hessian_freq < 1:
+            raise ValueError(
+                f"hessian_freq must be >= 1 (step k refreshes the Hutchinson "
+                f"estimate when k % hessian_freq == 0), got "
+                f"{self.hessian_freq}")
+
 
 def hutchinson_estimate(loss_fn, params, batch, key):
     """u * (H u) with Rademacher u (Pearlmutter HVP via jvp-of-grad)."""

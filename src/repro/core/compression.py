@@ -1,11 +1,13 @@
-"""FedPAC_light: SVD-compressed preconditioner upload (Table 6 / 11).
+"""Legacy FedPAC_light compression shims, now backed by ``core.transport``.
 
-Matrix-valued Theta leaves are truncated to rank r before "upload"; the
-server aggregates the reconstructions.  ``comm_bytes`` provides the
-per-round communication accounting used by benchmarks/table6_comm.py:
-  Local X      : |x|
-  FedPAC_X     : |x| + c|Theta|           (c = optimizer's multiplier)
-  FedPAC_light : |x| + compressed |Theta|
+The wire-true codec subsystem (``repro.core.transport``) superseded this
+module: uploads are encoded ``WireMsg`` structures and all byte accounting
+derives from ``transport.wire_bytes`` of those messages.  These shims keep
+the historical entry points alive by delegating to the ``lowrank_svd``
+codec, which also fixes the old mismatch where ``make_svd_codec``
+compressed only ``ndim >= 3`` (stacked) leaves while ``compressed_bytes``
+counted ``ndim >= 2`` leaves as compressed: both directions now share one
+codec, so the set of compressed leaves is identical by construction.
 """
 from __future__ import annotations
 
@@ -14,7 +16,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.utils.tree import tree_bytes
+from repro.core.transport import Dense, LowRankSVD, wire_bytes
 
 
 def svd_truncate(mat, rank: int):
@@ -25,42 +27,33 @@ def svd_truncate(mat, rank: int):
 
 
 def make_svd_codec(rank: int) -> Callable:
-    """Returns compress(thetas) applying rank-r SVD to matrix leaves.
+    """Legacy stacked round-trip: rank-r SVD per client, dense result.
 
-    Simulates the upload->decode round-trip: output has the original shapes
-    but carries only rank-r information (what the server would reconstruct).
+    Expects a *stacked* pytree with a leading (S,) client axis; each
+    client's tree goes through the ``lowrank_svd`` codec's
+    encode -> decode, so a stacked ``ndim >= 3`` leaf is compressed iff
+    the per-client ``ndim >= 2`` leaf is — the same rule accounting uses.
     """
-
-    def compress(thetas):
-        def leaf(x):
-            # stacked client axis in front: treat trailing 2 dims as matrix
-            if x.ndim >= 3 and x.shape[-1] > rank and x.shape[-2] > rank:
-                return svd_truncate(x, rank).astype(x.dtype)
-            return x
-        return jax.tree.map(leaf, thetas)
-
-    return compress
+    codec = LowRankSVD(rank=rank)
+    return jax.vmap(codec.roundtrip)
 
 
 def compressed_bytes(theta, rank: int) -> int:
-    """Bytes uploaded per client for a rank-r factored Theta."""
-    total = 0
-    for leaf in jax.tree.leaves(theta):
-        if leaf.ndim >= 2 and leaf.shape[-1] > rank and leaf.shape[-2] > rank:
-            m, n = leaf.shape[-2], leaf.shape[-1]
-            batch = int(jnp.prod(jnp.array(leaf.shape[:-2]))) if leaf.ndim > 2 else 1
-            total += batch * rank * (m + n + 1) * leaf.dtype.itemsize
-        else:
-            total += leaf.size * leaf.dtype.itemsize
-    return int(total)
+    """Bytes uploaded per client for a rank-r factored Theta.
+
+    Measured from the wire message the ``lowrank_svd`` codec actually
+    builds for this (per-client) tree — static shape math only.
+    """
+    codec = LowRankSVD(rank=rank)
+    return wire_bytes(jax.eval_shape(codec.encode, theta))
 
 
 def round_comm_bytes(params, theta=None, *, compressed_rank=None) -> int:
     """Per-round upload bytes for one client (Table 6 accounting)."""
-    total = tree_bytes(params)
+    total = wire_bytes(jax.eval_shape(Dense().encode, params))
     if theta is not None:
         if compressed_rank:
             total += compressed_bytes(theta, compressed_rank)
         else:
-            total += tree_bytes(theta)
+            total += wire_bytes(jax.eval_shape(Dense().encode, theta))
     return int(total)

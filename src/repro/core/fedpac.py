@@ -40,7 +40,8 @@ def make_round_fn(
     correct: bool = True,
     hessian_freq: int = 10,
     server_lr: float = 1.0,
-    compress_fn=None,       # FedPAC_light: Theta codec (see core.compression)
+    compress_fn=None,       # legacy stacked Theta round-trip (pre-transport)
+    transport=None,         # core.transport.Transport: wire-true codecs
     beta_max: float = BETA_MAX_AUTO,  # cap for beta="auto"
     drift_ema: float = 1.0,           # EMA coeff for beta="auto" (1 = raw)
     executor: Optional[ExecutorConfig] = None,
@@ -51,15 +52,17 @@ def make_round_fn(
     batches: pytree with leading (S, K, ...) axes (client, local step).
     ``align=False, correct=False`` (or ``variant="fedsoa"`` upstream) is the
     naive FedSOA baseline of Alg. 1.  ``beta="auto"`` enables drift-adaptive
-    correction (see ``core.engine.geometry``).
+    correction (see ``core.engine.geometry``).  ``transport`` with an
+    error-feedback-active delta codec needs per-client state — use
+    ``build_round_fn`` with ``n_clients`` for that.
     """
     spec = AlgorithmSpec(name=f"<inline:{opt.name}>", optimizer=opt.name,
                          align=align, correct=correct)
     driver = build_round_fn(
         spec, loss_fn, opt, lr=lr, local_steps=local_steps, beta=beta,
         hessian_freq=hessian_freq, server_lr=server_lr,
-        compress_fn=compress_fn, beta_max=beta_max, drift_ema=drift_ema,
-        executor=executor, jit=jit)
+        compress_fn=compress_fn, transport=transport, beta_max=beta_max,
+        drift_ema=drift_ema, executor=executor, jit=jit)
 
     def round_fn(server: ServerState, batches, rng):
         s = jax.tree.leaves(batches)[0].shape[0]

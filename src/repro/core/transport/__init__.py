@@ -1,0 +1,35 @@
+"""Geometry transport subsystem: wire-true codecs for federated uploads.
+
+Layering:
+
+  base.py            WireMsg / LeafMsg envelopes, the Codec protocol,
+                     wire_bytes accounting, the codec registry, Transport
+  dense.py           identity wire format (legacy upload path, bitwise)
+  lowrank.py         lowrank_svd (factored U·s·Vᵀ) and power_sketch
+  qblock.py          blockwise int8 quantization (kernels/qblock Pallas)
+  chain.py           codec composition ("lowrank_svd+qblock")
+  error_feedback.py  residual state for lossy delta codecs
+
+Every upload in both runtimes is an encoded ``WireMsg``; every byte of
+communication accounting comes from ``wire_bytes`` of those messages.
+"""
+from repro.core.transport.base import (
+    Codec, LeafMsg, Transport, TransportConfig, UnknownCodecError, WireMsg,
+    dense_leaf, register_codec, registered_codecs, resolve_codec,
+    validate_codec_spec, wire_bytes,
+)
+from repro.core.transport.dense import Dense
+from repro.core.transport.lowrank import LowRankSVD, PowerSketch
+from repro.core.transport.qblock import QBlock
+from repro.core.transport.chain import Chain
+from repro.core.transport.error_feedback import (
+    ef_init, ef_scatter, ef_view, encode_with_feedback,
+)
+
+__all__ = [
+    "Chain", "Codec", "Dense", "LeafMsg", "LowRankSVD", "PowerSketch",
+    "QBlock", "Transport", "TransportConfig", "UnknownCodecError",
+    "WireMsg", "dense_leaf", "ef_init", "ef_scatter", "ef_view",
+    "encode_with_feedback", "register_codec", "registered_codecs",
+    "resolve_codec", "validate_codec_spec", "wire_bytes",
+]

@@ -1,0 +1,206 @@
+"""Wire-true geometry transport: the ``Codec`` protocol and wire messages.
+
+A codec turns a pytree (a client's delta or Theta upload) into a
+``WireMsg`` — the *actual* structures that would cross the network — and
+back.  ``wire_bytes`` derives communication accounting purely from those
+structures (shape x itemsize of every payload array, host-side
+``math.prod``), never from analytic side-formulas, so the byte counts in
+benchmarks/table6_comm.py and ``comm_bytes_per_round`` are measurements of
+what the codec ships, not estimates of what it ought to ship.
+
+Messages are jit-transparent pytrees: payload arrays are data leaves,
+everything else (codec name, source treedef, per-leaf shape/dtype/kind) is
+static metadata.  That means a ``WireMsg`` can be produced inside a jitted
+round, vmapped over a stacked client axis, stacked into an async buffer,
+or abstractly evaluated with ``jax.eval_shape`` for accounting without
+touching a device.
+
+Codecs operate on *per-client* trees; stacked cohort trees go through
+``jax.vmap(codec.encode)`` so a codec never mixes data across clients.
+Leaves with more than two dims treat the leading dims as a batch of
+trailing (m, n) matrices — the same convention the optimizers use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class UnknownCodecError(ValueError):
+    """Codec spec names no registered codec."""
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("parts",),
+                   meta_fields=("kind", "shape", "dtype", "extra"))
+@dataclasses.dataclass(frozen=True)
+class LeafMsg:
+    """One leaf's wire representation: payload arrays + static envelope.
+
+    ``extra`` carries codec-specific static framing (e.g. qblock's block
+    size) so a message is self-describing — decode never depends on
+    out-of-band agreement with the encoder's configuration."""
+    kind: str          # "dense" | "lowrank" | "sketch" | "qblock"
+    shape: tuple       # original leaf shape (decode target)
+    dtype: Any         # original leaf dtype (decode target)
+    parts: dict        # name -> payload array (what actually ships)
+    extra: Any = None  # static codec framing (hashable)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("leaves",),
+                   meta_fields=("codec", "treedef"))
+@dataclasses.dataclass(frozen=True)
+class WireMsg:
+    """One upload: the encoded leaves of a pytree + its static treedef."""
+    codec: str
+    treedef: Any       # jax treedef of the source tree
+    leaves: tuple      # tuple[LeafMsg, ...], one per source leaf
+
+
+def wire_bytes(msg) -> int:
+    """Bytes on the wire for ``msg`` — summed from the payload arrays
+    themselves.  Works on concrete arrays, tracers, and the
+    ``jax.eval_shape`` output (accounting without device compute)."""
+    total = 0
+    for arr in jax.tree.leaves(msg):
+        total += math.prod(arr.shape) * jnp.dtype(arr.dtype).itemsize
+    return int(total)
+
+
+def dense_leaf(leaf) -> LeafMsg:
+    """Passthrough envelope: the leaf itself is the payload."""
+    return LeafMsg("dense", tuple(leaf.shape), jnp.dtype(leaf.dtype),
+                   {"x": leaf})
+
+
+class Codec:
+    """encode(tree) -> WireMsg; decode(WireMsg) -> tree.
+
+    Subclasses implement the per-leaf pair; ``encode``/``decode`` handle
+    tree plumbing.  ``lossless`` declares bitwise round-trips (error
+    feedback is skipped for lossless codecs).
+    """
+    name: str = "codec"
+    lossless: bool = False
+
+    def encode_leaf(self, leaf) -> LeafMsg:
+        raise NotImplementedError
+
+    def decode_leaf(self, msg: LeafMsg):
+        if msg.kind == "dense":
+            return msg.parts["x"]
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot decode kind {msg.kind!r}")
+
+    def encode(self, tree) -> WireMsg:
+        leaves, treedef = jax.tree.flatten(tree)
+        return WireMsg(self.name, treedef,
+                       tuple(self.encode_leaf(leaf) for leaf in leaves))
+
+    def decode(self, msg: WireMsg):
+        return jax.tree.unflatten(
+            msg.treedef, [self.decode_leaf(m) for m in msg.leaves])
+
+    def roundtrip(self, tree):
+        """What the server reconstructs from this client's upload."""
+        return self.decode(self.encode(tree))
+
+
+# --------------------------------------------------------------- registry
+
+_FACTORIES: dict[str, Callable[["TransportConfig"], Codec]] = {}
+
+
+def register_codec(name: str):
+    """Class/factory decorator: ``factory(cfg: TransportConfig) -> Codec``."""
+    def deco(factory):
+        _FACTORIES[name] = factory
+        return factory
+    return deco
+
+
+def registered_codecs() -> tuple:
+    return tuple(sorted(_FACTORIES))
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportConfig:
+    """Knobs shared by codec factories (one config, every codec)."""
+    rank: int = 8            # low-rank codecs (legacy FedConfig.svd_rank)
+    block: int = 128         # qblock elements per scale
+    sketch_iters: int = 2    # power_sketch subspace iterations
+    use_pallas: bool = False  # qblock: Pallas kernel vs jnp reference
+    interpret: bool = True   # qblock Pallas interpret-mode (CPU) fallback
+
+
+def _parse_spec(spec) -> list:
+    """'a+b' -> validated registry names; raises UnknownCodecError."""
+    names = [p.strip() for p in str(spec).split("+")]
+    for name in names:
+        if name not in _FACTORIES:
+            raise UnknownCodecError(
+                f"unknown upload codec {name!r} (want one of "
+                f"{registered_codecs()}, or a '+'-chain of them)")
+    return names
+
+
+def resolve_codec(spec, cfg: Optional[TransportConfig] = None) -> Codec:
+    """Codec instances pass through; strings resolve against the registry.
+
+    ``"a+b"`` composes a chain (a's wire structures re-encoded by b, e.g.
+    ``"lowrank_svd+qblock"`` quantizes the SVD factors).  Legacy
+    ``AlgorithmSpec.upload`` strings (``"dense"``/``"svd"``) are registered
+    names, so every pre-codec spec keeps resolving.
+    """
+    if isinstance(spec, Codec):
+        return spec
+    cfg = cfg or TransportConfig()
+    stages = [_FACTORIES[name](cfg) for name in _parse_spec(spec)]
+    if len(stages) == 1:
+        return stages[0]
+    from repro.core.transport.chain import Chain
+    return Chain(tuple(stages))
+
+
+def validate_codec_spec(spec) -> None:
+    """Raises UnknownCodecError for unresolvable specs (cheap, no build)."""
+    if not isinstance(spec, Codec):
+        _parse_spec(spec)
+
+
+# --------------------------------------------------------------- transport
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """The resolved wire policy of one experiment: one codec per channel.
+
+    delta  — every client's parameter update (always uploaded);
+    theta  — the preconditioner upload of aligned algorithms;
+    error_feedback — carry the residual of the lossy *delta* codec as
+      per-client state and add it back before the next encode (EF-SGD);
+      a no-op for lossless codecs.
+    """
+    delta: Codec
+    theta: Codec
+    error_feedback: bool = True
+
+    @property
+    def feedback_active(self) -> bool:
+        return self.error_feedback and not self.delta.lossless
+
+    def round_bytes(self, params, theta=None) -> int:
+        """Per-client upload bytes for one round, measured from the wire
+        messages the codecs actually build (``jax.eval_shape`` — static
+        shape math only, no device compute)."""
+        delta_like = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+        total = wire_bytes(jax.eval_shape(self.delta.encode, delta_like))
+        if theta is not None:
+            total += wire_bytes(jax.eval_shape(self.theta.encode, theta))
+        return total

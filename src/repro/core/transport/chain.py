@@ -1,0 +1,41 @@
+"""Chain codec: compose codecs by re-encoding wire structures.
+
+``Chain((a, b))`` feeds the *payload arrays* of ``a``'s message through
+``b`` — e.g. ``lowrank_svd+qblock`` ships int8-quantized SVD factors.
+This works because a ``WireMsg`` is itself a pytree whose leaves are the
+payload arrays, so the next stage needs no special cases; ``wire_bytes``
+of the outermost message is what actually ships.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.transport.base import Codec, WireMsg
+
+
+@dataclasses.dataclass(frozen=True)
+class Chain(Codec):
+    stages: tuple   # of Codec, applied left to right on encode
+
+    def __post_init__(self):
+        if len(self.stages) < 2:
+            raise ValueError("Chain wants at least two codecs")
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return "+".join(c.name for c in self.stages)
+
+    @property
+    def lossless(self) -> bool:  # type: ignore[override]
+        return all(c.lossless for c in self.stages)
+
+    def encode(self, tree) -> WireMsg:
+        msg = tree
+        for codec in self.stages:
+            msg = codec.encode(msg)
+        return msg
+
+    def decode(self, msg: WireMsg):
+        for codec in reversed(self.stages):
+            msg = codec.decode(msg)
+        return msg

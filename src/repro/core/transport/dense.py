@@ -1,0 +1,31 @@
+"""Dense codec: the identity wire format (legacy upload path).
+
+Every leaf ships as-is; ``decode(encode(x))`` is bitwise ``x``, and
+``wire_bytes`` equals ``tree_bytes`` — the pre-transport per-round byte
+totals, reproduced exactly (tested in tests/test_transport.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.transport.base import (
+    Codec, LeafMsg, TransportConfig, dense_leaf, register_codec,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense(Codec):
+    name = "dense"
+    lossless = True
+
+    def encode_leaf(self, leaf) -> LeafMsg:
+        return dense_leaf(leaf)
+
+    def decode_leaf(self, msg: LeafMsg):
+        return msg.parts["x"]
+
+
+@register_codec("dense")
+def _make_dense(cfg: TransportConfig) -> Dense:
+    del cfg
+    return Dense()

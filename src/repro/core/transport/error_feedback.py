@@ -1,0 +1,65 @@
+"""Error feedback for lossy upload codecs (EF-SGD, Karimireddy et al. 2019).
+
+A lossy delta codec introduces a bias: what the server decodes is not
+what the client computed.  Error feedback carries the residual
+
+    e_i' = (delta_i + e_i) - decode(encode(delta_i + e_i))
+
+as per-client persistent state, adding it back before the next round's
+encode — the compression error is delayed, not lost, and convergence is
+restored for biased compressors (e.g. aggressive low-rank truncation).
+
+The residual is *declared* state: the sync runtime threads it through the
+unified ``ClientStateSpec`` protocol (composed with any algorithm state,
+see ``core.algorithms``), and the async runtime drives the same protocol
+functions per dispatch, so residuals persist across rounds in both
+runtimes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transport.base import Codec
+
+
+def ef_init(params, n_clients: int):
+    """Stacked (N, ...) f32 residuals, zero at round 0."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_clients, *p.shape), jnp.float32), params)
+
+
+def ef_view(state, cid):
+    """One client's residual."""
+    return jax.tree.map(lambda r: r[cid], state)
+
+
+def ef_scatter(state, cohort, new_residuals):
+    """Write the cohort's refreshed residuals back (leading cohort axis)."""
+    return jax.tree.map(lambda a, u: a.at[cohort].set(u), state,
+                        new_residuals)
+
+
+def encode_with_feedback(codec: Codec, tree, residual=None):
+    """Encode ``tree`` (error-compensated when ``residual`` is given).
+
+    Returns (msg, decoded, new_residual): ``decoded`` is the server-side
+    reconstruction of ``msg`` (computed here anyway to form the residual —
+    callers in the same program reuse it instead of decoding twice);
+    decoded and new_residual are None when no residual was passed.  The
+    residual accumulates in f32, but what goes to the codec keeps
+    ``tree``'s dtypes — the wire format (and its byte count) must not
+    change just because error feedback is on; any loss from casting the
+    compensated value back down is captured by the residual like any
+    other compression error.
+    """
+    if residual is None:
+        return codec.encode(tree), None, None
+    src32 = jax.tree.map(
+        lambda t, r: t.astype(jnp.float32) + r, tree, residual)
+    src = jax.tree.map(lambda s, t: s.astype(t.dtype), src32, tree)
+    msg = codec.encode(src)
+    decoded = codec.decode(msg)
+    new_residual = jax.tree.map(
+        lambda s, d: s - d.astype(jnp.float32), src32, decoded)
+    return msg, decoded, new_residual

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core.engine import (
     AggregationConfig, aggregate, update_controller,
 )
+from repro.core.transport import wire_bytes
 from repro.fed.async_runtime.latency import LatencyModel
 
 
@@ -69,10 +70,19 @@ class AsyncConfig:
 
 def make_async_aggregate_fn(*, lr: float, local_steps: int,
                             server_lr: float = 1.0, align: bool = True,
-                            mixing=None, jit: bool = True):
+                            mixing=None, transport=None, wire_cell=None,
+                            jit: bool = True):
     """Returns flush(params, theta, g_global, ctrl, deltas, thetas, weights)
     -> (params', theta', g_global', ctrl', metrics); stacked (B, ...)
     buffer.  One engine aggregate + one controller step, jitted together.
+
+    With ``transport`` (core.transport.Transport) the buffer entries are
+    stacked *wire messages* — deltas always, thetas too when ``align`` —
+    decoded here at the flush boundary; the measured per-client byte
+    count is static shape math, captured at trace time into the caller's
+    ``wire_cell`` dict (key "per_client") as an exact host-side int.
+    Without a transport the entries are dense trees (legacy path, kept
+    for the bitwise-equivalence tests).
 
     ``mixing`` is an optional AlgorithmSpec hook ``(deltas, thetas) ->
     (B,)`` (e.g. preconditioned mixing); its weights multiply the
@@ -82,6 +92,15 @@ def make_async_aggregate_fn(*, lr: float, local_steps: int,
                             server_lr=server_lr, align=align)
 
     def flush(params, theta, g_global, ctrl, deltas, thetas, weights):
+        if transport is not None:
+            b = jax.tree.leaves(weights)[0].shape[0]
+            up_bytes = wire_bytes(deltas)
+            deltas = jax.vmap(transport.delta.decode)(deltas)
+            if align:
+                up_bytes += wire_bytes(thetas)
+                thetas = jax.vmap(transport.theta.decode)(thetas)
+            if wire_cell is not None:
+                wire_cell["per_client"] = up_bytes // b
         if mixing is not None:
             weights = weights * mixing(deltas, thetas)
         new_params, new_theta, new_g, agg = aggregate(

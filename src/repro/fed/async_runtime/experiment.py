@@ -30,9 +30,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import init_server, zero_theta
-from repro.core.algorithms import AlgorithmSpec, make_local_update, resolve
+from repro.core.algorithms import (
+    AlgorithmSpec, EF_STATE, make_local_update, resolve,
+)
 from repro.core.client import LocalRunConfig
 from repro.core.engine import BETA_MAX_AUTO, advance_server, make_controller
+from repro.core.transport import encode_with_feedback
 from repro.fed.base import FedExperiment
 from repro.fed.rounds import FedConfig, resolve_lr
 from repro.fed.staging import stage_client_batches
@@ -74,17 +77,52 @@ class AsyncFederatedExperiment(FedExperiment):
                              align=self.align)
         local_fn = make_local_update(self.spec, loss_fn, self.opt, run)
 
-        def local(p, theta, g, batches, key, beta_in):
+        # client-side wire encoding happens inside the jitted local round:
+        # the buffer then holds wire messages, not dense trees (a real
+        # memory win for compressed codecs on large buffers)
+        self.transport = fed.make_transport(self.spec)
+        self._ef = self.transport.feedback_active
+        align = self.align
+
+        def local(p, theta, g, batches, key, beta_in, residual=None):
             delta, theta_out, _, loss = local_fn(
                 p, theta, g, beta=beta_in, view=None, batch_i=batches,
                 key_i=key)
-            return delta, theta_out, loss
+            # the decoded tree is discarded: the buffer holds wire form
+            # only, and the flush decodes the whole stacked buffer once
+            dmsg, _, new_residual = encode_with_feedback(
+                self.transport.delta, delta, residual)
+            tmsg = (self.transport.theta.encode(theta_out) if align
+                    else theta_out)
+            return dmsg, tmsg, new_residual, loss
 
         self._local_fn = jax.jit(local)
+        self._wire_cell = {}
         self._flush_fn = make_async_aggregate_fn(
             lr=self.lr, local_steps=fed.local_steps, server_lr=fed.server_lr,
-            align=self.align, mixing=self.spec.mixing)
-        self._codec = self.spec.make_codec(fed.svd_rank)
+            align=self.align, mixing=self.spec.mixing,
+            transport=self.transport, wire_cell=self._wire_cell)
+        # EF residuals use the same ClientStateSpec protocol as the sync
+        # runtime, driven per dispatch (a client's own state is not
+        # lock-step: it reads/writes it when *it* trains).  The scatter is
+        # jitted with the stacked state donated so updating one client's
+        # row is an in-place dynamic-update-slice, not an O(N x |params|)
+        # copy per dispatch.
+        self._ef_state = (EF_STATE.init(params, fed.n_clients)
+                          if self._ef else None)
+        if self._ef:
+            self._ef_scatter = jax.jit(
+                lambda s, cid, u: EF_STATE.server_update(
+                    s, cid[None], jax.tree.map(lambda x: x[None], u), None),
+                donate_argnums=0)
+            # a discarded (over-stale) arrival never reaches the server:
+            # fold its decoded content back into the residual so the
+            # components are delayed, not silently lost
+            self._ef_restore = jax.jit(
+                lambda s, cid, msg: jax.tree.map(
+                    lambda a, d: a.at[cid].add(d.astype(jnp.float32)),
+                    s, self.transport.delta.decode(msg)),
+                donate_argnums=0)
         self._weight_fn = make_staleness_weight(
             self.acfg.staleness_mode, self.acfg.staleness_alpha,
             self.acfg.hinge_threshold)
@@ -104,16 +142,25 @@ class AsyncFederatedExperiment(FedExperiment):
     # ------------------------------------------------------------ clients
 
     def _client_payload(self, cid: int):
-        """Train client ``cid`` on the current server snapshot (dispatch)."""
+        """Train client ``cid`` on the current server snapshot (dispatch).
+
+        The payload holds *wire messages* — delta (error-compensated for
+        lossy codecs) and, for aligned algorithms, Theta — exactly what
+        the client would put on the network."""
         batches = stage_client_batches(self.client_batch_fn, cid,
                                        self.fed.local_steps, self.rng)
         key = jax.random.key(int(self.rng.integers(0, 2**31)))
         theta = self.server.theta if self.server.theta is not None \
             else self._theta0
-        delta, theta_out, loss = self._local_fn(
+        residual = EF_STATE.client_view(self._ef_state, cid) if self._ef \
+            else None
+        dmsg, tmsg, new_residual, loss = self._local_fn(
             self.server.params, theta, self.server.g_global, batches, key,
-            self.server.geom.beta)
-        return {"delta": delta, "theta": theta_out, "loss": loss}
+            self.server.geom.beta, residual)
+        if self._ef:
+            self._ef_state = self._ef_scatter(
+                self._ef_state, jnp.asarray(cid), new_residual)
+        return {"delta": dmsg, "theta": tmsg, "loss": loss}
 
     # ------------------------------------------------------------ loop
 
@@ -140,17 +187,25 @@ class AsyncFederatedExperiment(FedExperiment):
             s = version - ev.version
             if acf.max_staleness is not None and s > acf.max_staleness:
                 discarded += 1
+                if self._ef:
+                    # the residual was committed at dispatch assuming this
+                    # upload would be aggregated — restore the discarded
+                    # components into the client's residual (EF invariant:
+                    # compression error is delayed, never lost)
+                    self._ef_state = self._ef_restore(
+                        self._ef_state, jnp.asarray(ev.client_id),
+                        ev.payload["delta"])
                 continue
             buffered.append(ev)
             stale.append(s)
             weights.append(self._weight_fn(s))
 
+        # stack the buffered wire messages client-axis-first; the jitted
+        # flush decodes them right before aggregation
         deltas = jax.tree.map(lambda *xs: jnp.stack(xs),
                               *[ev.payload["delta"] for ev in buffered])
         thetas = jax.tree.map(lambda *xs: jnp.stack(xs),
                               *[ev.payload["theta"] for ev in buffered])
-        if self._codec is not None:
-            thetas = self._codec(thetas)
         w = jnp.asarray(weights, jnp.float32)
         theta_ref = self.server.theta if self.server.theta is not None \
             else self._theta0
@@ -163,6 +218,9 @@ class AsyncFederatedExperiment(FedExperiment):
         self.total_dropped += dropped
         self.total_discarded += discarded
         rec = {k: float(v) for k, v in metrics.items()}
+        if "per_client" in self._wire_cell:
+            # trace-time capture: exact host int, not a lossy f32 scalar
+            rec["upload_bytes"] = float(self._wire_cell["per_client"])
         rec.update({
             "loss": float(np.mean([float(ev.payload["loss"])
                                    for ev in buffered])),
@@ -182,5 +240,6 @@ class AsyncFederatedExperiment(FedExperiment):
     # ------------------------------------------------------------ accounting
 
     def comm_bytes_per_round(self) -> int:
-        return self.spec.comm_bytes(self.server.params, self.server.theta,
-                                    svd_rank=self.fed.svd_rank)
+        return self.transport.round_bytes(
+            self.server.params,
+            self.server.theta if self.spec.align else None)

@@ -31,8 +31,11 @@ import jax.numpy as jnp
 
 from repro import optim
 from repro.core import init_server
-from repro.core.algorithms import AlgorithmSpec, build_round_fn, resolve
+from repro.core.algorithms import (
+    AlgorithmSpec, build_round_fn, init_round_client_state, resolve,
+)
 from repro.core.engine import BETA_MAX_AUTO, ExecutorConfig, make_controller
+from repro.core.transport import Transport, validate_codec_spec
 from repro.fed.base import FedExperiment
 from repro.fed.staging import stage_cohort_batches
 
@@ -50,12 +53,20 @@ class FedConfig:
     lr: Optional[float] = None     # default: paper's per-optimizer lr
     beta: Union[float, str] = 0.5  # FedPAC correction strength (or "auto")
     hessian_freq: int = 10
-    svd_rank: int = 8              # for *_light variants
+    svd_rank: int = 8              # low-rank codec rank (*_light variants)
     seed: int = 0
     server_lr: float = 1.0
     runtime: str = "sync"          # "sync" | "async" (fed.base.make_experiment)
     executor: str = "vmap"         # cohort executor: vmap|shard_map|chunked
     chunk_size: int = 8            # for executor="chunked"
+    # geometry transport (core.transport): None inherits the spec's declared
+    # codec specs (upload / delta_upload); strings may chain with "+"
+    theta_codec: Optional[str] = None
+    delta_codec: Optional[str] = None
+    error_feedback: bool = True    # EF residuals for lossy delta codecs
+    qblock_size: int = 128         # qblock codec: elements per scale
+    sketch_iters: int = 2          # power_sketch subspace iterations
+    use_pallas: bool = False       # qblock: fused Pallas kernel (TPU)
 
     def __post_init__(self):
         if not (0.0 < self.participation <= 1.0):
@@ -70,13 +81,39 @@ class FedConfig:
         if self.local_steps < 1:
             raise ValueError(
                 f"local_steps must be >= 1, got {self.local_steps}")
+        if self.hessian_freq < 1:
+            raise ValueError(
+                f"hessian_freq must be >= 1, got {self.hessian_freq}")
         if isinstance(self.beta, str) and self.beta != "auto":
             raise ValueError(
                 f"beta must be a float or 'auto', got {self.beta!r}")
+        for codec_spec in (self.theta_codec, self.delta_codec):
+            if codec_spec is not None:
+                validate_codec_spec(codec_spec)  # UnknownCodecError early
+        if self.svd_rank < 1:
+            raise ValueError(f"svd_rank must be >= 1, got {self.svd_rank}")
+        if self.qblock_size < 1:
+            raise ValueError(
+                f"qblock_size must be >= 1, got {self.qblock_size}")
+        if self.use_pallas and self.qblock_size % 128:
+            raise ValueError(
+                f"qblock_size must be a multiple of 128 (VPU lane width) "
+                f"when use_pallas=True, got {self.qblock_size}")
+        if self.sketch_iters < 0:
+            raise ValueError(
+                f"sketch_iters must be >= 0, got {self.sketch_iters}")
 
     def executor_config(self) -> ExecutorConfig:
         return ExecutorConfig(backend=self.executor,
                               chunk_size=self.chunk_size)
+
+    def make_transport(self, spec: AlgorithmSpec) -> Transport:
+        """Resolve the wire policy for ``spec`` under this config."""
+        return spec.make_transport(
+            rank=self.svd_rank, block=self.qblock_size,
+            sketch_iters=self.sketch_iters,
+            delta_codec=self.delta_codec, theta_codec=self.theta_codec,
+            error_feedback=self.error_feedback, use_pallas=self.use_pallas)
 
 
 def parse_algorithm(name: str):
@@ -132,16 +169,18 @@ class FederatedExperiment(FedExperiment):
         self.opt = self.spec.make_optimizer(**(opt_kwargs or {}))
         self.lr = resolve_lr(fed, self.spec)
         beta = self.spec.resolve_beta(fed.beta)
+        self.transport = fed.make_transport(self.spec)
         self.round_fn = build_round_fn(
             self.spec, loss_fn, self.opt, lr=self.lr,
             local_steps=fed.local_steps, beta=beta,
             hessian_freq=fed.hessian_freq, server_lr=fed.server_lr,
-            compress_fn=self.spec.make_codec(fed.svd_rank),
+            transport=self.transport,
             executor=fed.executor_config(), n_clients=fed.n_clients)
         geom = make_controller(beta, correct=self.spec.correct,
                                beta_max=BETA_MAX_AUTO)
         self.server = init_server(params, self.opt, geom=geom)
-        self.client_state = self.spec.init_client_state(params, fed.n_clients)
+        self.client_state = init_round_client_state(
+            self.spec, self.transport, params, fed.n_clients)
 
     # ------------------------------------------------------------ staging
 
@@ -174,5 +213,6 @@ class FederatedExperiment(FedExperiment):
     # ------------------------------------------------------------ accounting
 
     def comm_bytes_per_round(self) -> int:
-        return self.spec.comm_bytes(self.server.params, self.server.theta,
-                                    svd_rank=self.fed.svd_rank)
+        return self.transport.round_bytes(
+            self.server.params,
+            self.server.theta if self.spec.align else None)

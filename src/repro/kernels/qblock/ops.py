@@ -1,0 +1,15 @@
+"""Jitted wrapper for blockwise int8 quantization: Pallas on TPU
+(interpret mode for CPU validation) or the pure-jnp oracle."""
+from __future__ import annotations
+
+from repro.kernels.qblock import ref
+from repro.kernels.qblock.kernel import quantize as _pallas
+
+dequantize = ref.dequantize
+
+
+def quantize(x, *, block: int = 128, eps: float = 1e-12,
+             use_pallas: bool = False, interpret: bool = True):
+    if use_pallas:
+        return _pallas(x, block=block, eps=eps, interpret=interpret)
+    return ref.quantize(x, block=block, eps=eps)

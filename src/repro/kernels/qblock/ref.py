@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for blockwise int8 quantization (qblock codec).
+
+A flat array is split into blocks of ``block`` elements; each block ships
+one f32 scale and ``block`` int8 values:
+
+  scale_b = max(|x_b|) / 127          (floored at eps so zero blocks work)
+  q_b     = clip(round(x_b / scale_b), -127, 127)
+
+Dequantization is ``q_b * scale_b``; the per-element error is bounded by
+scale_b / 2 (round-to-nearest).  The op is a single memory-bound pass over
+the data — the TPU version is the Pallas kernel in kernel.py (one HBM
+round-trip, rowwise max + scale + cast fused).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def quantize(x, *, block: int = 128, eps: float = 1e-12):
+    """Blockwise int8 quantization of any-shape ``x``.
+
+    Returns (q, scale): q int8 (nblocks, block) — zero-padded to a whole
+    number of blocks — and scale f32 (nblocks,).
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    nb = -(-n // block)
+    pad = nb * block - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    xb = flat.reshape(nb, block)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, eps)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize(q, scale, shape, dtype=jnp.float32):
+    """Inverse of ``quantize``: (nblocks, block) int8 + (nblocks,) scales
+    back to ``shape`` (padding trimmed)."""
+    xb = q.astype(jnp.float32) * scale[:, None]
+    n = math.prod(shape)
+    return xb.reshape(-1)[:n].reshape(shape).astype(dtype)

@@ -74,7 +74,7 @@ def make_fed_round_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
                         beta: float = 0.5, clients: int = 8,
                         local_steps: int = 2, remat: bool = True,
                         seq_shard: bool = False, batch_axes=("data",),
-                        algorithm=None):
+                        algorithm=None, transport=None):
     """Full FedPAC round: the global batch splits into ``clients`` cohorts of
     ``local_steps`` microbatches each; Theta/params aggregation lowers to
     all-reduces over the client (data) axis.
@@ -83,7 +83,13 @@ def make_fed_round_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
     the alignment policy, the beta policy (``beta`` is filtered through
     ``spec.resolve_beta`` — a correct=False spec zeroes it, FedCM pins it),
     and per-client mixing weights; the default is the historical FedPAC
-    configuration (align=True, uniform mixing, beta as given)."""
+    configuration (align=True, uniform mixing, beta as given).
+
+    ``transport`` (core.transport.Transport) routes each client group's
+    delta and Theta uploads through wire-true codecs before aggregation —
+    the lowering then exercises the encode/decode compute the production
+    round pays.  This step is stateless, so error feedback (which needs
+    per-client residual state) is rejected here."""
     spec = resolve(algorithm) if algorithm is not None else None
     align = spec.align if spec is not None else True
     if spec is not None:
@@ -92,6 +98,10 @@ def make_fed_round_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
             raise ValueError(
                 "beta='auto' needs the GeometryController round path "
                 "(fed runtimes) — pass a float beta to make_fed_round_step")
+    if transport is not None and transport.feedback_active:
+        raise ValueError(
+            "error feedback needs per-client residual state — use the fed "
+            "runtimes (build_round_fn) or pass error_feedback=False")
     loss_fn = make_loss_fn(cfg, remat=remat, seq_shard=seq_shard,
                            batch_axes=batch_axes)
     run = LocalRunConfig(lr=lr, local_steps=local_steps, beta=beta,
@@ -109,6 +119,10 @@ def make_fed_round_step(cfg: ModelConfig, opt: LocalOptimizer, *, lr: float,
         deltas, thetas, losses = jax.vmap(
             lambda bi, ki: client_round(loss_fn, opt, run, params, theta,
                                         g_global, bi, ki))(batches, keys)
+        if transport is not None:
+            deltas = jax.vmap(transport.delta.roundtrip)(deltas)
+            if align:
+                thetas = jax.vmap(transport.theta.roundtrip)(thetas)
         if spec is not None and spec.mixing is not None:
             weights = spec.mixing(deltas, thetas)
         else:

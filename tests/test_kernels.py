@@ -9,6 +9,7 @@ from repro.kernels.ns_ortho.kernel import matmul_fused
 from repro.kernels.sophia_update import ops as so_ops, ref as so_ref
 from repro.kernels.soap_rotate import ops as sr_ops, ref as sr_ref
 from repro.kernels.soap_rotate.kernel import adam_moments
+from repro.kernels.qblock import ops as qb_ops, ref as qb_ref
 
 KEY = jax.random.key(7)
 
@@ -83,6 +84,30 @@ def test_soap_rotate_kernel(m, n):
     for w, o in zip(want_bc, got_bc):
         assert jnp.max(jnp.abs(w - o)) < 5e-5
     assert jnp.max(jnp.abs(want_bc[0] - want[0])) > 1e-3  # correction bites
+
+
+@pytest.mark.parametrize("shape", [(17,), (128,), (64, 64), (3, 40, 50),
+                                   (4096,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qblock_kernel_matches_ref(shape, dtype):
+    x = 3.0 * jax.random.normal(KEY, shape, dtype)
+    q_ref, s_ref = qb_ref.quantize(x, block=128)
+    q_pal, s_pal = qb_ops.quantize(x, block=128, use_pallas=True,
+                                   interpret=True)
+    assert q_pal.dtype == jnp.int8 and q_ref.shape == q_pal.shape
+    assert jnp.array_equal(q_ref, q_pal)
+    assert jnp.max(jnp.abs(s_ref - s_pal)) < 1e-7
+    # dequantized error bounded by half a step per block
+    x_hat = qb_ref.dequantize(q_pal, s_pal, x.shape)
+    err = jnp.abs(x_hat - x.astype(jnp.float32)).reshape(-1)
+    bound = jnp.repeat(s_pal / 2, 128)[: err.size]
+    assert bool(jnp.all(err <= bound + 1e-6))
+
+
+def test_qblock_kernel_rejects_bad_block():
+    with pytest.raises(ValueError, match="multiple of 128"):
+        qb_ops.quantize(jnp.ones((8,)), block=100, use_pallas=True,
+                        interpret=True)
 
 
 @pytest.mark.parametrize("shape", [(40,), (128, 256)])

@@ -1,0 +1,428 @@
+"""Geometry transport subsystem: wire-true codecs, accounting, error
+feedback, and the dense-codec bitwise equivalence with the pre-refactor
+upload path in both runtimes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.api import build_experiment
+from repro.core import init_server
+from repro.core.algorithms import build_round_fn, resolve
+from repro.core.compression import compressed_bytes, round_comm_bytes
+from repro.core.transport import (
+    Chain, Dense, LowRankSVD, PowerSketch, QBlock, Transport,
+    TransportConfig, UnknownCodecError, encode_with_feedback,
+    registered_codecs, resolve_codec, wire_bytes,
+)
+from repro.fed import (
+    AsyncConfig, AsyncFederatedExperiment, FedConfig, FederatedExperiment,
+    LatencyModel,
+)
+from repro.fed.async_runtime.buffer import make_async_aggregate_fn
+from repro.utils.tree import tree_bytes
+
+KEY = jax.random.key(3)
+N_CLIENTS, D, OUT, K = 4, 12, 8, 2
+
+
+def _tree(seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"L": jax.random.normal(k1, (16, 12)),
+            "stack": jax.random.normal(k2, (3, 10, 9)),
+            "vec": jnp.arange(7, dtype=jnp.float32)}
+
+
+def _problem():
+    params = {"w": jnp.zeros((D, OUT))}
+    W = jax.random.normal(KEY, (D, OUT))
+    X = np.asarray(jax.random.normal(jax.random.key(1),
+                                     (N_CLIENTS, 64, D)), np.float32)
+    Y = X @ np.asarray(W, np.float32)
+
+    def loss_fn(p, b):
+        xb, yb = b
+        return jnp.mean((xb @ p["w"] - yb) ** 2)
+
+    def batch_fn(cid, rng):
+        idx = rng.choice(64, size=8, replace=True)
+        return jnp.asarray(X[cid, idx]), jnp.asarray(Y[cid, idx])
+
+    return params, loss_fn, batch_fn
+
+
+def _fed(algo, **kw):
+    defaults = dict(algorithm=algo, n_clients=N_CLIENTS, participation=0.5,
+                    rounds=2, local_steps=K, svd_rank=2, seed=0)
+    defaults.update(kw)
+    return FedConfig(**defaults)
+
+
+# ----------------------------------------------------------------- registry
+
+def test_registered_codecs_and_resolution():
+    names = registered_codecs()
+    for name in ["dense", "svd", "lowrank_svd", "power_sketch", "qblock"]:
+        assert name in names
+    assert isinstance(resolve_codec("dense"), Dense)
+    assert isinstance(resolve_codec("svd"), LowRankSVD)  # legacy alias
+    chain = resolve_codec("lowrank_svd+qblock", TransportConfig(rank=3))
+    assert isinstance(chain, Chain)
+    assert chain.name == "lowrank_svd+qblock" and not chain.lossless
+    codec = LowRankSVD(rank=5)
+    assert resolve_codec(codec) is codec
+
+
+def test_unknown_codec_spec_rejected():
+    with pytest.raises(UnknownCodecError, match="unknown upload codec"):
+        resolve_codec("gzip")
+    with pytest.raises(UnknownCodecError, match="unknown upload codec"):
+        resolve_codec("lowrank_svd+bogus")
+    with pytest.raises(UnknownCodecError, match="upload"):
+        FedConfig(delta_codec="bogus")
+    from repro.core.algorithms import AlgorithmSpec
+    with pytest.raises(ValueError, match="upload"):
+        AlgorithmSpec(name="tmp_t", delta_upload="bogus")
+
+
+# -------------------------------------------------------- round-trip bounds
+
+def test_dense_roundtrip_bitwise():
+    tree = _tree()
+    codec = Dense()
+    out = codec.roundtrip(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("cls", [LowRankSVD, PowerSketch])
+def test_lowrank_error_nonincreasing_in_rank(cls):
+    mat = {"L": jax.random.normal(KEY, (16, 12))}
+    errs = []
+    for r in (1, 2, 4, 8, 12):
+        out = cls(rank=r).roundtrip(mat)
+        errs.append(float(jnp.linalg.norm(out["L"] - mat["L"])))
+    assert all(a >= b - 1e-6 for a, b in zip(errs, errs[1:]))
+    assert errs[-1] < 1e-3          # full rank reconstructs
+    # sketch can't beat the optimal rank-r approximation (SVD)
+    if cls is PowerSketch:
+        svd_err = float(jnp.linalg.norm(
+            LowRankSVD(rank=4).roundtrip(mat)["L"] - mat["L"]))
+        sk_err = float(jnp.linalg.norm(
+            PowerSketch(rank=4).roundtrip(mat)["L"] - mat["L"]))
+        assert sk_err >= svd_err - 1e-5
+
+
+def test_lowrank_small_leaves_pass_through():
+    tree = _tree()
+    out = LowRankSVD(rank=4).roundtrip(tree)
+    np.testing.assert_array_equal(np.asarray(out["vec"]),
+                                  np.asarray(tree["vec"]))
+    # batched leaf: trailing dims compressed per matrix
+    for i in range(3):
+        assert np.linalg.matrix_rank(np.asarray(out["stack"][i]),
+                                     tol=1e-4) <= 4
+
+
+def test_qblock_error_bounded_by_half_scale():
+    tree = {"x": 10.0 * jax.random.normal(KEY, (5, 90))}
+    codec = QBlock(block=128)
+    msg = codec.encode(tree)
+    out = codec.decode(msg)
+    scale = np.asarray(msg.leaves[0].parts["scale"])      # (nblocks,)
+    err = np.abs(np.asarray(out["x"] - tree["x"])).reshape(-1)
+    pad = scale.size * 128 - err.size
+    err = np.pad(err, (0, pad))
+    per_block = err.reshape(scale.size, 128).max(axis=1)
+    assert np.all(per_block <= scale / 2 + 1e-6)
+
+
+def test_qblock_message_is_self_describing():
+    """The block size rides in the envelope: a decoder configured with a
+    different qblock_size still frames the blocks correctly."""
+    tree = {"x": 7.0 * jax.random.normal(KEY, (5, 90))}
+    msg = QBlock(block=128).encode(tree)
+    assert msg.leaves[0].extra == 128
+    same = QBlock(block=128).decode(msg)
+    other = QBlock(block=256).decode(msg)
+    np.testing.assert_array_equal(np.asarray(same["x"]),
+                                  np.asarray(other["x"]))
+
+
+def test_chain_quantizes_factors():
+    tree = {"L": jax.random.normal(KEY, (32, 24))}
+    cfg = TransportConfig(rank=4)
+    chain = resolve_codec("lowrank_svd+qblock", cfg)
+    lowrank = resolve_codec("lowrank_svd", cfg)
+    msg = chain.encode(tree)
+    assert wire_bytes(msg) < wire_bytes(lowrank.encode(tree))
+    out = chain.decode(msg)
+    # decoding recovers approximately the pure low-rank reconstruction
+    ref = lowrank.roundtrip(tree)
+    assert float(jnp.max(jnp.abs(out["L"] - ref["L"]))) < 0.2
+
+
+# ------------------------------------------------------- golden wire bytes
+
+def test_wire_bytes_golden_formulas():
+    m, n, r, b = 16, 12, 4, 4                       # f32 itemsize 4
+    tree = {"L": jnp.zeros((m, n)), "vec": jnp.zeros((7,))}
+    dense = wire_bytes(Dense().encode(tree))
+    assert dense == tree_bytes(tree) == (m * n + 7) * b
+    light = wire_bytes(LowRankSVD(rank=r).encode(tree))
+    assert light == r * (m + n + 1) * b + 7 * b     # U, s, Vt + dense vec
+    sketch = wire_bytes(PowerSketch(rank=r).encode(tree))
+    assert sketch == r * (m + n) * b + 7 * b        # Q, B + dense vec
+    qb = wire_bytes(QBlock(block=128).encode(tree))
+    n_el, blocks = m * n + 7, -(-m * n // 128) + 1
+    assert qb == n_el + 4 * blocks                  # int8 values + f32 scales
+    # batched leaf: leading dims multiply the factored payload
+    stacked = {"s": jnp.zeros((3, m, n))}
+    assert wire_bytes(LowRankSVD(rank=r).encode(stacked)) == \
+        3 * r * (m + n + 1) * b
+
+
+def test_accounting_derives_from_wire_messages():
+    """The legacy accounting shims measure the same messages the codec
+    ships — incl. the once-mismatched unstacked 2-D Theta leaf."""
+    theta = {"L": jnp.zeros((16, 12))}               # 2-D leaf, regression
+    rank = 4
+    codec = LowRankSVD(rank=rank)
+    assert compressed_bytes(theta, rank) == wire_bytes(codec.encode(theta))
+    # and the codec really does compress that leaf (old codec did not,
+    # while the old accounting already counted it as compressed)
+    assert np.linalg.matrix_rank(
+        np.asarray(codec.roundtrip(theta)["L"]), tol=1e-4) <= rank
+    params = {"w": jnp.zeros((8, 8))}
+    assert round_comm_bytes(params, theta) == tree_bytes(params) + \
+        tree_bytes(theta)
+    assert round_comm_bytes(params, theta, compressed_rank=rank) == \
+        tree_bytes(params) + rank * (16 + 12 + 1) * 4
+
+
+def test_transport_round_bytes_matches_run_metric():
+    """comm_bytes_per_round (eval_shape accounting) == the upload_bytes
+    measured inside the jitted round, in both runtimes."""
+    params, loss_fn, batch_fn = _problem()
+    for runtime_kw in [dict(), dict(runtime="async")]:
+        for algo in ["fedpac_soap", "fedpac_soap_light"]:
+            fed = _fed(algo, **runtime_kw)
+            kw = dict(async_cfg=AsyncConfig(buffer_size=2, concurrency=3)) \
+                if runtime_kw else {}
+            exp = build_experiment(algo, params=params, loss_fn=loss_fn,
+                                   client_batch_fn=batch_fn, fed=fed, **kw)
+            hist = exp.run()
+            assert hist[-1]["upload_bytes"] == exp.comm_bytes_per_round()
+
+
+# ------------------------------------------------ dense bitwise equivalence
+
+def test_dense_codec_bitwise_equals_pre_refactor_sync():
+    """The transport-routed round with the dense codec is bitwise identical
+    to the pre-refactor (no-transport) upload path."""
+    params, loss_fn, _ = _problem()
+    opt = optim.make("soap")
+    X = jax.random.normal(jax.random.key(5), (N_CLIENTS, K, 8, D))
+    W = jax.random.normal(KEY, (D, OUT))
+    batches = (X, X @ W)
+    rng = jax.random.key(6)
+    spec = resolve("fedpac_soap")
+    legacy = build_round_fn(spec, loss_fn, opt, lr=0.05, local_steps=K,
+                            beta=0.5)
+    wired = build_round_fn(spec, loss_fn, opt, lr=0.05, local_steps=K,
+                           beta=0.5,
+                           transport=Transport(Dense(), Dense()))
+    s0 = init_server(params, opt)
+    sl, _, ml = legacy(s0, None, jnp.arange(N_CLIENTS), batches, rng)
+    sw, _, mw = wired(s0, None, jnp.arange(N_CLIENTS), batches, rng)
+    np.testing.assert_array_equal(np.asarray(sl.params["w"]),
+                                  np.asarray(sw.params["w"]))
+    for leaf_l, leaf_w in zip(jax.tree.leaves(sl.theta),
+                              jax.tree.leaves(sw.theta)):
+        np.testing.assert_array_equal(np.asarray(leaf_l),
+                                      np.asarray(leaf_w))
+    assert float(ml["loss"]) == float(mw["loss"])
+
+
+def test_dense_codec_bitwise_equals_pre_refactor_async_flush():
+    """Async side of the same claim: a flush over stacked dense wire
+    messages equals the legacy flush over the raw dense trees, bitwise."""
+    dense = Dense()
+    deltas = {"w": jax.random.normal(KEY, (3, D, OUT))}
+    thetas = {"GG": jax.random.normal(jax.random.key(9), (3, D, D))}
+    params = {"w": jnp.zeros((D, OUT))}
+    theta = {"GG": jnp.zeros((D, D))}
+    g = {"w": jnp.zeros((D, OUT))}
+    from repro.core.engine import make_controller
+    ctrl = make_controller(0.5, correct=True)
+    w = jnp.asarray([1.0, 0.5, 0.25])
+    legacy = make_async_aggregate_fn(lr=0.05, local_steps=K)
+    wired = make_async_aggregate_fn(
+        lr=0.05, local_steps=K, transport=Transport(dense, dense))
+    dmsg = jax.vmap(dense.encode)(deltas)
+    tmsg = jax.vmap(dense.encode)(thetas)
+    # the wire messages hold the same arrays bitwise (identity format)
+    np.testing.assert_array_equal(np.asarray(dmsg.leaves[0].parts["x"]),
+                                  np.asarray(deltas["w"]))
+    out_l = legacy(params, theta, g, ctrl, deltas, thetas, w)
+    out_w = wired(params, theta, g, ctrl, dmsg, tmsg, w)
+    for a, b in zip(jax.tree.leaves(out_l[:4]), jax.tree.leaves(out_w[:4])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------- error feedback
+
+def test_encode_with_feedback_residual_algebra():
+    codec = LowRankSVD(rank=1)
+    delta = {"w": jax.random.normal(KEY, (10, 9))}
+    res0 = jax.tree.map(jnp.zeros_like, delta)
+    msg, dec, res1 = encode_with_feedback(codec, delta, res0)
+    # the returned reconstruction is exactly decode(msg) (reused by the
+    # sync round instead of a second decode pass)
+    np.testing.assert_array_equal(np.asarray(dec["w"]),
+                                  np.asarray(codec.decode(msg)["w"]))
+    np.testing.assert_allclose(np.asarray(res1["w"]),
+                               np.asarray(delta["w"] - dec["w"]), rtol=1e-5)
+    # second round: the residual is added back before encoding
+    msg2, _, _ = encode_with_feedback(codec, delta, res1)
+    np.testing.assert_allclose(
+        np.asarray(codec.decode(codec.encode(
+            jax.tree.map(jnp.add, delta, res1)))["w"]),
+        np.asarray(codec.decode(msg2)["w"]), rtol=1e-5)
+    # lossless codec: residual stays zero
+    _, _, res_d = encode_with_feedback(Dense(), delta, res0)
+    assert float(jnp.max(jnp.abs(res_d["w"]))) == 0.0
+    # EF must not change the wire format: a bf16 tree still ships bf16
+    # factors (same bytes as the plain encode), residual stays f32
+    bf = {"w": jax.random.normal(KEY, (16, 12), jnp.bfloat16)}
+    res_bf = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), bf)
+    msg_bf, _, res_bf1 = encode_with_feedback(codec, bf, res_bf)
+    assert wire_bytes(msg_bf) == wire_bytes(codec.encode(bf))
+    assert res_bf1["w"].dtype == jnp.float32
+
+
+def test_error_feedback_state_persists_sync():
+    params, loss_fn, batch_fn = _problem()
+    fed = _fed("fedpac_soap", delta_codec="lowrank_svd", participation=1.0)
+    exp = FederatedExperiment(fed, params, loss_fn, batch_fn)
+    assert exp.transport.feedback_active
+    assert exp.client_state is not None         # EF residuals declared
+    res0 = np.asarray(jax.tree.leaves(exp.client_state)[0])
+    assert not res0.any()
+    exp.run()
+    res1 = np.asarray(jax.tree.leaves(exp.client_state)[0])
+    assert res1.any()                           # residuals accumulated
+    assert res1.shape[0] == N_CLIENTS
+    # EF really changes the trajectory vs the same codec without it
+    noef = FederatedExperiment(
+        _fed("fedpac_soap", delta_codec="lowrank_svd", participation=1.0,
+             error_feedback=False), params, loss_fn, batch_fn)
+    noef.run()
+    assert noef.client_state is None
+    assert np.any(np.asarray(exp.server.params["w"])
+                  != np.asarray(noef.server.params["w"]))
+
+
+def test_error_feedback_composes_with_algorithm_state():
+    """SCAFFOLD state + EF residuals thread through one composed
+    ClientStateSpec; both slots update."""
+    params, loss_fn, batch_fn = _problem()
+    fed = _fed("scaffold", delta_codec="qblock", participation=1.0)
+    exp = FederatedExperiment(fed, params, loss_fn, batch_fn)
+    algo_state, ef_state = exp.client_state
+    exp.run()
+    algo_state2, ef_state2 = exp.client_state
+    assert np.any(np.asarray(jax.tree.leaves(algo_state.c_clients)[0])
+                  != np.asarray(jax.tree.leaves(algo_state2.c_clients)[0]))
+    assert np.asarray(jax.tree.leaves(ef_state2)[0]).any()
+    del algo_state2, ef_state, ef_state2
+
+
+def test_error_feedback_state_persists_async():
+    params, loss_fn, batch_fn = _problem()
+    fed = _fed("fedpac_soap", delta_codec="lowrank_svd", runtime="async")
+    exp = AsyncFederatedExperiment(
+        fed, params, loss_fn, batch_fn,
+        async_cfg=AsyncConfig(buffer_size=2, concurrency=3,
+                              latency=LatencyModel(heterogeneity=1.0)))
+    assert exp._ef_state is not None
+    exp.run()
+    assert np.asarray(jax.tree.leaves(exp._ef_state)[0]).any()
+
+
+def test_error_feedback_discard_restores_residual():
+    """An over-stale (discarded) upload never reaches the server; its
+    decoded content must be folded back into the client's residual —
+    delayed, not lost."""
+    params, loss_fn, batch_fn = _problem()
+    fed = _fed("fedpac_soap", delta_codec="lowrank_svd", runtime="async")
+    exp = AsyncFederatedExperiment(
+        fed, params, loss_fn, batch_fn,
+        async_cfg=AsyncConfig(buffer_size=2, concurrency=3,
+                              latency=LatencyModel(heterogeneity=1.0)))
+    payload = exp._client_payload(0)
+    r1 = jax.tree.map(lambda x: np.asarray(x[0]).copy(), exp._ef_state)
+    dec = exp.transport.delta.decode(payload["delta"])
+    exp._ef_state = exp._ef_restore(exp._ef_state, jnp.asarray(0),
+                                    payload["delta"])
+    np.testing.assert_allclose(
+        np.asarray(exp._ef_state["w"][0]), r1["w"] + np.asarray(dec["w"]),
+        rtol=1e-5)
+    # end-to-end: a config that discards every stale arrival still runs
+    harsh = AsyncFederatedExperiment(
+        _fed("fedpac_soap", delta_codec="lowrank_svd", runtime="async"),
+        params, loss_fn, batch_fn,
+        async_cfg=AsyncConfig(buffer_size=2, concurrency=4, max_staleness=1,
+                              latency=LatencyModel(heterogeneity=2.0)))
+    hist = harsh.run()
+    assert np.isfinite(hist[-1]["loss"])
+    assert np.all(np.isfinite(np.asarray(jax.tree.leaves(
+        harsh._ef_state)[0])))
+
+
+# ------------------------------------------------------------- lossy e2e
+
+def test_lossy_codecs_still_converge():
+    """Aggressively-compressed uploads keep both runtimes training."""
+    params, loss_fn, batch_fn = _problem()
+    for kw in [dict(delta_codec="qblock"),
+               dict(delta_codec="lowrank_svd+qblock"),
+               dict(theta_codec="power_sketch")]:
+        exp = FederatedExperiment(_fed("fedpac_soap", rounds=3, **kw),
+                                  params, loss_fn, batch_fn)
+        hist = exp.run()
+        assert np.isfinite(hist[-1]["loss"])
+        assert hist[-1]["upload_bytes"] == exp.comm_bytes_per_round()
+
+
+def test_build_round_fn_rejects_transport_plus_compress_fn():
+    params, loss_fn, _ = _problem()
+    with pytest.raises(ValueError, match="not both"):
+        build_round_fn(resolve("fedpac_soap"), loss_fn, optim.make("soap"),
+                       lr=0.1, local_steps=K, compress_fn=lambda t: t,
+                       transport=Transport(Dense(), Dense()))
+
+
+def test_ef_requires_n_clients():
+    params, loss_fn, _ = _problem()
+    with pytest.raises(ValueError, match="n_clients"):
+        build_round_fn(resolve("fedpac_soap"), loss_fn, optim.make("soap"),
+                       lr=0.1, local_steps=K,
+                       transport=Transport(LowRankSVD(rank=2), Dense()))
+
+
+# --------------------------------------------------------------- validation
+
+def test_local_run_config_validates_eagerly():
+    from repro.core.client import LocalRunConfig
+    with pytest.raises(ValueError, match="hessian_freq"):
+        LocalRunConfig(lr=0.1, local_steps=2, hessian_freq=0)
+    with pytest.raises(ValueError, match="local_steps"):
+        LocalRunConfig(lr=0.1, local_steps=0)
+    with pytest.raises(ValueError, match="hessian_freq"):
+        FedConfig(hessian_freq=0)
+    # Pallas lane constraint is checked eagerly, not deep inside jit
+    with pytest.raises(ValueError, match="multiple of 128"):
+        FedConfig(qblock_size=64, use_pallas=True)
+    FedConfig(qblock_size=64)  # jnp reference path: any block size is fine
