@@ -20,8 +20,10 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, make_fed_vision_problem
-from repro.fed import AsyncConfig, FedConfig, LatencyModel, make_experiment
+from benchmarks.common import emit, materialize_cached
+from repro.api import build_experiment
+from repro.fed import AsyncConfig, FedConfig, LatencyModel
+from repro.scenarios import cifar_like
 
 
 def _fed(algo, *, runtime, rounds, n_clients, seed):
@@ -34,9 +36,11 @@ def run(quick: bool = True, seed: int = 0):
     rounds = 12 if quick else 50
     n_clients = 8 if quick else 20
     hets = [0.0, 1.5] if quick else [0.0, 0.5, 1.0, 2.0]
-    params, loss_fn, batch_fn, eval_fn = make_fed_vision_problem(
-        model="cnn", n=1500 if quick else 4000, image_size=8, n_classes=4,
-        n_clients=n_clients, alpha=0.1, seed=seed, batch=8)
+    # one materialization shared by every (heterogeneity x runner) cell
+    scenario = materialize_cached(
+        cifar_like(model="cnn", n=1500 if quick else 4000, image_size=8,
+                   n_classes=4, alpha=0.1, batch=8, n_clients=n_clients),
+        seed, n_clients)
 
     for het in hets:
         latency = LatencyModel(heterogeneity=het, jitter=0.25)
@@ -57,8 +61,8 @@ def run(quick: bool = True, seed: int = 0):
         ]
         finals = {}
         for name, fed, acfg in runners:
-            exp = make_experiment(fed, params, loss_fn, batch_fn, eval_fn,
-                                  async_cfg=acfg)
+            exp = build_experiment(fed.algorithm, scenario=scenario,
+                                   fed=fed, async_cfg=acfg)
             t0 = time.perf_counter()
             hist = exp.run()
             wall = time.perf_counter() - t0

@@ -1,20 +1,29 @@
-"""Shared benchmark scaffolding: timing, CSV emission, tiny fed problems."""
+"""Shared benchmark scaffolding: timing, CSV emission, scenario runners."""
 from __future__ import annotations
 
 import time
 
-import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.api import build_experiment
-from repro.data import make_image_classification, dirichlet_partition
-from repro.models.vision import (
-    init_cnn, cnn_apply, init_vit, vit_apply, classification_loss, accuracy,
-)
 from repro.fed import FedConfig
+from repro.scenarios import cifar_like, materialize, resolve
 
 ROWS = []
+
+# sweeps run many algorithms over the same task: materialize each
+# (scenario, seed, n_clients) once and share the bundle (data, partition,
+# params, jitted eval) across cells
+_SCENARIO_CACHE = {}
+
+
+def materialize_cached(scenario, seed: int, n_clients: int):
+    spec = resolve(scenario)
+    key = (repr(spec), seed, n_clients)
+    if key not in _SCENARIO_CACHE:
+        _SCENARIO_CACHE[key] = materialize(spec, seed=seed,
+                                           n_clients=n_clients)
+    return _SCENARIO_CACHE[key]
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -37,49 +46,18 @@ def make_fed_vision_problem(*, model: str = "cnn", n: int = 3000,
                             n_clients: int = 10, alpha: float = 0.1,
                             seed: int = 0, batch: int = 16,
                             noise: float = 2.5):
-    """Dirichlet-partitioned synthetic image task + model + loss/eval fns."""
-    n_test = 768
-    X_all, y_all = make_image_classification(n + n_test,
-                                             image_size=image_size,
-                                             n_classes=n_classes, seed=seed,
-                                             noise=noise)
-    X, y = X_all[:n], y_all[:n]
-    Xe, ye = jnp.asarray(X_all[n:]), jnp.asarray(y_all[n:])
-    if alpha is None:  # IID
-        rng = np.random.default_rng(seed)
-        idx = rng.permutation(n)
-        parts = np.array_split(idx, n_clients)
-    else:
-        parts = dirichlet_partition(y, n_clients, alpha, seed=seed)
+    """Dirichlet-partitioned synthetic image task + model + loss/eval fns.
 
-    if model == "cnn":
-        params = init_cnn(jax.random.key(seed), n_classes=n_classes, width=8,
-                          blocks=2)
-        apply = cnn_apply
-    else:
-        params, meta = init_vit(jax.random.key(seed), image_size=image_size,
-                                patch=4, d_model=48, layers=2, heads=2,
-                                n_classes=n_classes)
-        apply = lambda p, x: vit_apply(p, meta, x)
-
-    def loss_fn(p, b):
-        return classification_loss(apply(p, b["x"]), b["y"])
-
-    @jax.jit
-    def eval_logits(p):
-        return apply(p, Xe)
-
-    def eval_fn(p):
-        logits = eval_logits(p)
-        return {"test_acc": accuracy(logits, ye),
-                "test_loss": classification_loss(logits, ye)}
-
-    def batch_fn(cid, rng):
-        # fixed size (with replacement) so cohort batches stack
-        idx = rng.choice(parts[cid], size=batch, replace=True)
-        return {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
-
-    return params, loss_fn, batch_fn, eval_fn
+    Legacy adapter: builds the equivalent (unregistered) ``ScenarioSpec``
+    via ``repro.scenarios.cifar_like`` and materializes it — the golden
+    test in ``tests/test_scenarios.py`` pins this path bitwise against the
+    registered ``cifar_like_cnn`` catalog entry.  Prefer
+    ``build_experiment(algorithm, scenario=...)`` in new code.
+    """
+    spec = cifar_like(model=model, n=n, image_size=image_size,
+                      n_classes=n_classes, alpha=alpha, batch=batch,
+                      noise=noise)
+    return materialize(spec, seed=seed, n_clients=n_clients).problem()
 
 
 # per-task-tuned lrs (the paper grid-searches per optimizer; Sophia's clip
@@ -87,10 +65,19 @@ def make_fed_vision_problem(*, model: str = "cnn", n: int = 3000,
 VISION_LRS = {"sophia": 2e-2}
 
 
-def run_algorithm(algo: str, params, loss_fn, batch_fn, eval_fn, *,
+def run_algorithm(algo: str, params=None, loss_fn=None, batch_fn=None,
+                  eval_fn=None, *, scenario=None, scenario_seed=None,
                   n_clients=10, participation=0.5, rounds=20, local_steps=5,
                   lr=None, beta=0.5, seed=0, svd_rank=8, theta_codec=None,
                   delta_codec=None, error_feedback=True):
+    """Run one algorithm on an explicit problem bundle or a scenario.
+
+    ``scenario`` (a registered name or ``ScenarioSpec``) routes through
+    ``build_experiment(algorithm, scenario=...)``; ``scenario_seed``
+    defaults to the fed seed.  The vision Sophia lr override applies on
+    both paths (every caller here is a vision-scale problem — LM tables
+    drive ``build_experiment`` directly).
+    """
     if lr is None and "sophia" in algo:
         lr = VISION_LRS["sophia"]
     fed = FedConfig(algorithm=algo, n_clients=n_clients,
@@ -98,8 +85,15 @@ def run_algorithm(algo: str, params, loss_fn, batch_fn, eval_fn, *,
                     local_steps=local_steps, lr=lr, beta=beta, seed=seed,
                     svd_rank=svd_rank, theta_codec=theta_codec,
                     delta_codec=delta_codec, error_feedback=error_feedback)
-    exp = build_experiment(algo, params=params, loss_fn=loss_fn,
-                           client_batch_fn=batch_fn, eval_fn=eval_fn, fed=fed)
+    if scenario is not None:
+        bundle = materialize_cached(
+            scenario, scenario_seed if scenario_seed is not None else seed,
+            n_clients)
+        exp = build_experiment(algo, scenario=bundle, fed=fed)
+    else:
+        exp = build_experiment(algo, params=params, loss_fn=loss_fn,
+                               client_batch_fn=batch_fn, eval_fn=eval_fn,
+                               fed=fed)
     t0 = time.perf_counter()
     hist = exp.run()
     wall = time.perf_counter() - t0

@@ -20,9 +20,11 @@ import time
 import numpy as np
 import jax
 
+from repro.api import build_experiment
 from repro.core.engine import ExecutorConfig
-from repro.fed import FedConfig, FederatedExperiment
-from benchmarks.common import emit, make_fed_vision_problem
+from repro.fed import FedConfig
+from repro.scenarios import cifar_like, materialize
+from benchmarks.common import emit
 
 BACKEND_CFGS = {
     "vmap": dict(executor="vmap"),
@@ -43,16 +45,20 @@ def _time_round(exp, iters=3):
 def run(quick: bool = True):
     cohorts = [4, 8] if quick else [4, 8, 16, 32]
     n_clients = max(cohorts)
-    params, loss_fn, batch_fn, _ = make_fed_vision_problem(
-        model="cnn", n=600, image_size=8, n_classes=4,
-        n_clients=n_clients, alpha=0.3, batch=8)
+    scenario = cifar_like(model="cnn", n=600, image_size=8, n_classes=4,
+                          alpha=0.3, batch=8, n_clients=n_clients)
+    # materialize once and drop the eval fn: only the round is timed
+    params, loss_fn, batch_fn, _ = materialize(
+        scenario, seed=0, n_clients=n_clients).problem()
     results = {}
     for backend, kw in BACKEND_CFGS.items():
         for s in cohorts:
             fed = FedConfig(algorithm="fedpac_soap", n_clients=n_clients,
                             participation=s / n_clients, rounds=4,
                             local_steps=2, **kw)
-            exp = FederatedExperiment(fed, params, loss_fn, batch_fn)
+            exp = build_experiment("fedpac_soap", params=params,
+                                   loss_fn=loss_fn, client_batch_fn=batch_fn,
+                                   fed=fed)
             us = _time_round(exp)
             results[(backend, s)] = (us, exp.history[-1]["loss"])
             emit(f"exec_{backend}_S{s}", us,

@@ -8,17 +8,16 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import make_fed_vision_problem, run_algorithm, emit
+from benchmarks.common import run_algorithm, emit
 
 
 def run(quick: bool = True):
     rounds = 30 if quick else 60
     out = {}
     for algo in ["local_soap", "fedpac_soap"]:
-        params, loss_fn, batch_fn, eval_fn = make_fed_vision_problem(
-            alpha=0.1, n_clients=10, seed=1)
-        exp, hist, wall = run_algorithm(algo, params, loss_fn, batch_fn,
-                                        eval_fn, rounds=rounds, local_steps=5)
+        exp, hist, wall = run_algorithm(algo, scenario="cifar_like_cnn",
+                                        scenario_seed=1, rounds=rounds,
+                                        local_steps=5)
         accs = [h["test_acc"] for h in hist]
         drifts = [h["drift"] for h in hist]
         thresh = 0.30

@@ -19,7 +19,7 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table1_vit,fig3,"
                          "table3,table4,table5,table6,async_drift,"
-                         "exec_scaling,transport")
+                         "exec_scaling,transport,scenario_matrix")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -27,7 +27,7 @@ def main(argv=None):
     from benchmarks import (table1_noniid, fig3_drift, table3_llm,
                             table4_beta, table5_ablation, table6_comm,
                             seed_robustness, async_drift, executor_scaling,
-                            transport_bench)
+                            transport_bench, scenario_matrix)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
@@ -43,6 +43,7 @@ def main(argv=None):
         ("async_drift", lambda: async_drift.run(quick=quick)),
         ("exec_scaling", lambda: executor_scaling.run(quick=quick)),
         ("transport", lambda: transport_bench.run(quick=quick)),
+        ("scenario_matrix", lambda: scenario_matrix.run(quick=quick)),
         ("robust", lambda: seed_robustness.run(quick=quick)),
     ]
     failures = 0

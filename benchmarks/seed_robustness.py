@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import make_fed_vision_problem, run_algorithm, emit
+from benchmarks.common import run_algorithm, emit
 
 SEEDS = (0, 1, 2)
 
@@ -20,12 +20,11 @@ def run(quick: bool = True, model: str = "cnn", rounds: int = 25):
     for opt in ["sophia", "muon", "soap"]:
         accs = {"local": [], "fedpac": []}
         for seed in SEEDS:
-            params, loss_fn, batch_fn, eval_fn = make_fed_vision_problem(
-                model=model, alpha=0.1, n_clients=10, seed=seed)
             for kind in ["local", "fedpac"]:
                 _, hist, wall = run_algorithm(
-                    f"{kind}_{opt}", params, loss_fn, batch_fn, eval_fn,
-                    rounds=rounds, local_steps=5, seed=seed)
+                    f"{kind}_{opt}", scenario=f"cifar_like_{model}",
+                    scenario_seed=seed, rounds=rounds, local_steps=5,
+                    seed=seed)
                 accs[kind].append(hist[-1]["test_acc"])
         local = float(np.mean(accs["local"]))
         pac = float(np.mean(accs["fedpac"]))

@@ -2,6 +2,10 @@
 Dirichlet non-IID for first-order, Local second-order (FedSOA), and FedPAC
 variants, on CNN and ViT backbones over synthetic images.
 
+Scenarios come from the registry (``cifar_like_cnn`` / ``cifar_like_vit``);
+each severity level is the same registered task under another
+``PartitionSpec`` — the declarative form of the paper's alpha sweep.
+
 Paper claims validated (ordering, not absolute numbers — synthetic data):
   1. On non-IID data, Local second-order optimizers degrade vs their FedPAC
      counterparts.
@@ -10,9 +14,8 @@ Paper claims validated (ordering, not absolute numbers — synthetic data):
 """
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import make_fed_vision_problem, run_algorithm, emit
+from benchmarks.common import run_algorithm, emit
+from repro.scenarios import PartitionSpec, resolve
 
 ALGOS = ["fedavg", "local_adamw", "local_sophia", "fedpac_sophia",
          "local_muon", "fedpac_muon", "local_soap", "fedpac_soap"]
@@ -20,17 +23,20 @@ ALGOS = ["fedavg", "local_adamw", "local_sophia", "fedpac_sophia",
 
 def run(quick: bool = True, model: str = "cnn"):
     rounds = 25 if quick else 60
-    alphas = [(None, "iid"), (0.1, "dir0.1")] if quick else \
-        [(None, "iid"), (0.5, "dir0.5"), (0.1, "dir0.1"), (0.05, "dir0.05")]
+    partitions = [("iid", PartitionSpec("iid")),
+                  ("dir0.1", PartitionSpec("dirichlet", alpha=0.1))]
+    if not quick:
+        partitions[1:1] = [("dir0.5", PartitionSpec("dirichlet", alpha=0.5))]
+        partitions.append(("dir0.05",
+                           PartitionSpec("dirichlet", alpha=0.05)))
+    base = resolve(f"cifar_like_{model}")
     results = {}
-    for alpha, aname in alphas:
-        params, loss_fn, batch_fn, eval_fn = make_fed_vision_problem(
-            model=model, alpha=alpha, n_clients=10)
+    for aname, part in partitions:
+        scn = base.with_partition(part, suffix=aname)
         for algo in ALGOS:
-            t0 = time.perf_counter()
             exp, hist, wall = run_algorithm(
-                algo, params, loss_fn, batch_fn, eval_fn, rounds=rounds,
-                local_steps=5, participation=0.5)
+                algo, scenario=scn, rounds=rounds, local_steps=5,
+                participation=0.5)
             acc = hist[-1]["test_acc"]
             results[(aname, algo)] = acc
             emit(f"table1_{model}_{aname}_{algo}",
@@ -38,7 +44,9 @@ def run(quick: bool = True, model: str = "cnn"):
                  f"acc={acc:.4f};loss={hist[-1]['loss']:.4f};"
                  f"drift={hist[-1]['drift']:.3e}")
     # claim checks
-    for aname in [a for _, a in alphas if a != "iid"]:
+    for aname, _ in partitions:
+        if aname == "iid":
+            continue
         for o in ["sophia", "muon", "soap"]:
             local = results[(aname, f"local_{o}")]
             pac = results[(aname, f"fedpac_{o}")]

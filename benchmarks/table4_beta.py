@@ -3,19 +3,17 @@ strength beta.  Claim: interior optimum (beta=0 underuses the correction,
 beta->1 over-regularizes)."""
 from __future__ import annotations
 
-from benchmarks.common import make_fed_vision_problem, run_algorithm, emit
+from benchmarks.common import run_algorithm, emit
 
 
 def run(quick: bool = True):
     rounds = 15 if quick else 50
     betas = [0.0, 0.5, 0.9] if quick else [0.0, 0.1, 0.3, 0.5, 0.7, 0.9]
-    params, loss_fn, batch_fn, eval_fn = make_fed_vision_problem(
-        alpha=0.05, n_clients=10, seed=2)
     accs = {}
     for beta in betas:
         exp, hist, wall = run_algorithm(
-            "fedpac_soap", params, loss_fn, batch_fn, eval_fn, rounds=rounds,
-            local_steps=5, beta=beta)
+            "fedpac_soap", scenario="cifar_like_cnn_dir0.05",
+            scenario_seed=2, rounds=rounds, local_steps=5, beta=beta)
         accs[beta] = hist[-1]["test_acc"]
         emit(f"table4_beta{beta}", wall / rounds * 1e6,
              f"acc={accs[beta]:.4f}")

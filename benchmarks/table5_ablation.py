@@ -3,7 +3,7 @@ Local SOAP vs alignment-only vs correction-only vs full.
 Claim: each component improves over Local SOAP; full is best."""
 from __future__ import annotations
 
-from benchmarks.common import make_fed_vision_problem, run_algorithm, emit
+from benchmarks.common import run_algorithm, emit
 
 VARIANTS = ["local_soap", "align_only_soap", "correct_only_soap",
             "fedpac_soap"]
@@ -11,12 +11,11 @@ VARIANTS = ["local_soap", "align_only_soap", "correct_only_soap",
 
 def run(quick: bool = True):
     rounds = 15 if quick else 50
-    params, loss_fn, batch_fn, eval_fn = make_fed_vision_problem(
-        alpha=0.05, n_clients=10, seed=3)
     accs = {}
     for v in VARIANTS:
-        exp, hist, wall = run_algorithm(v, params, loss_fn, batch_fn,
-                                        eval_fn, rounds=rounds, local_steps=5)
+        exp, hist, wall = run_algorithm(v, scenario="cifar_like_cnn_dir0.05",
+                                        scenario_seed=3, rounds=rounds,
+                                        local_steps=5)
         accs[v] = hist[-1]["test_acc"]
         emit(f"table5_{v}", wall / rounds * 1e6, f"acc={accs[v]:.4f}")
     emit("table5_claim_components", 0.0,

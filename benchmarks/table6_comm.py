@@ -10,19 +10,18 @@ benchmarks/transport_bench.py for the full codec x rank x quantization
 sweep."""
 from __future__ import annotations
 
-from benchmarks.common import make_fed_vision_problem, run_algorithm, emit
+from benchmarks.common import run_algorithm, emit
 
 
 def run(quick: bool = True):
     rounds = 12 if quick else 40
-    params, loss_fn, batch_fn, eval_fn = make_fed_vision_problem(
-        alpha=0.05, n_clients=10, seed=4)
     rows = {}
     for algo in ["local_soap", "fedpac_soap", "fedpac_soap_light",
                  "local_muon", "fedpac_muon", "fedpac_muon_light"]:
-        exp, hist, wall = run_algorithm(algo, params, loss_fn, batch_fn,
-                                        eval_fn, rounds=rounds, local_steps=5,
-                                        svd_rank=4)
+        exp, hist, wall = run_algorithm(algo,
+                                        scenario="cifar_like_cnn_dir0.05",
+                                        scenario_seed=4, rounds=rounds,
+                                        local_steps=5, svd_rank=4)
         comm = exp.comm_bytes_per_round()
         rows[algo] = (hist[-1]["test_acc"], comm, wall / rounds)
         emit(f"table6_{algo}", wall / rounds * 1e6,

@@ -10,13 +10,13 @@ Every byte count is measured from the encoded wire messages
 """
 from __future__ import annotations
 
-from benchmarks.common import make_fed_vision_problem, run_algorithm, emit
+from benchmarks.common import run_algorithm, emit
+
+SCENARIO = "cifar_like_cnn_dir0.05"
 
 
 def run(quick: bool = True):
     rounds = 10 if quick else 30
-    params, loss_fn, batch_fn, eval_fn = make_fed_vision_problem(
-        alpha=0.05, n_clients=10, seed=7)
 
     # --- Theta codec sweep (fedpac_soap uploads) -------------------------
     sweep = [("dense", None), ("lowrank_svd", 2), ("lowrank_svd", 8),
@@ -28,7 +28,7 @@ def run(quick: bool = True):
     base_comm = None
     for codec, rank in sweep:
         exp, hist, wall = run_algorithm(
-            "fedpac_soap", params, loss_fn, batch_fn, eval_fn,
+            "fedpac_soap", scenario=SCENARIO, scenario_seed=7,
             rounds=rounds, local_steps=5, svd_rank=rank or 8,
             theta_codec=codec)
         comm = exp.comm_bytes_per_round()
@@ -45,7 +45,7 @@ def run(quick: bool = True):
     results = {}
     for ef in (True, False):
         exp, hist, _ = run_algorithm(
-            "fedpac_soap", params, loss_fn, batch_fn, eval_fn,
+            "fedpac_soap", scenario=SCENARIO, scenario_seed=7,
             rounds=rounds, local_steps=5, svd_rank=1,
             delta_codec="lowrank_svd", error_feedback=ef)
         results[ef] = hist[-1]["test_loss"]

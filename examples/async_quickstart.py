@@ -5,8 +5,9 @@ flushes its buffer every `buffer_size` arrivals.  Naive async Local SOAP
 averages whatever geometry arrives; staleness-aware FedPAC decays stale
 deltas/Theta by 1/(1+s)^alpha before Alignment/Correction.
 
-Passing ``async_cfg`` to ``build_experiment`` selects the buffered-
-asynchronous runtime for the *same algorithm specs* the sync runtime runs.
+The task is the same registered ``cifar_like_cnn`` scenario the sync
+quickstart runs; passing ``async_cfg`` to ``build_experiment`` selects the
+buffered-asynchronous runtime for the *same algorithm and scenario specs*.
 
   PYTHONPATH=src python examples/async_quickstart.py
 
@@ -15,33 +16,19 @@ QUICKSTART_ROUNDS / QUICKSTART_SAMPLES shrink the run (CI smoke job).
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
+import dataclasses
 
-from repro.api import AsyncConfig, LatencyModel, build_experiment
-from repro.data import make_image_classification, dirichlet_partition
-from repro.models.vision import init_cnn, cnn_apply, classification_loss, accuracy
+from repro.api import AsyncConfig, LatencyModel, build_experiment, \
+    materialize, resolve_scenario
 
 ROUNDS = int(os.environ.get("QUICKSTART_ROUNDS", "20"))
 N = int(os.environ.get("QUICKSTART_SAMPLES", "3000"))
 
-# --- data: 10 clients, Dirichlet(0.1) label skew (strongly non-IID) -------
-X, y = make_image_classification(N, image_size=12, n_classes=8, noise=2.0)
-parts = dirichlet_partition(y, n_clients=10, alpha=0.1)
-n_eval = max(N // 5, 100)
-Xe, ye = jnp.asarray(X[-n_eval:]), jnp.asarray(y[-n_eval:])
-
-params = init_cnn(jax.random.key(0), n_classes=8, width=8, blocks=2)
-
-def loss_fn(p, batch):
-    return classification_loss(cnn_apply(p, batch["x"]), batch["y"])
-
-def eval_fn(p):
-    return {"test_acc": accuracy(cnn_apply(p, Xe), ye)}
-
-def batch_fn(cid, rng):
-    idx = rng.choice(parts[cid], size=16)
-    return {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+# --- the task: 10 clients, Dirichlet(0.1) label skew (strongly non-IID) ---
+# materialized once: both runs share the data, partition, params and eval
+spec = resolve_scenario("cifar_like_cnn")
+scenario = materialize(
+    dataclasses.replace(spec, source_kwargs=dict(spec.source_kwargs, n=N)))
 
 # --- heavy latency heterogeneity + occasional dropout ----------------------
 latency = LatencyModel(heterogeneity=1.5, jitter=0.5, dropout=0.05)
@@ -49,10 +36,9 @@ latency = LatencyModel(heterogeneity=1.5, jitter=0.5, dropout=0.05)
 for algo, mode in [("local_soap", "none"), ("fedpac_soap", "poly")]:
     acfg = AsyncConfig(buffer_size=3, staleness_mode=mode,
                        staleness_alpha=0.5, latency=latency)
-    exp = build_experiment(algo, params=params, loss_fn=loss_fn,
-                           client_batch_fn=batch_fn, eval_fn=eval_fn,
-                           async_cfg=acfg, n_clients=10, participation=0.5,
-                           rounds=ROUNDS, local_steps=5, beta=0.5)
+    exp = build_experiment(algo, scenario=scenario, async_cfg=acfg,
+                           participation=0.5, rounds=ROUNDS, local_steps=5,
+                           beta=0.5)
     hist = exp.run()
     h = hist[-1]
     print(f"{algo:12s} staleness={mode:4s} acc={h['test_acc']:.3f} "

@@ -1,10 +1,14 @@
-"""Quickstart: FedPAC in ~40 lines, via the public builder API.
+"""Quickstart: FedPAC in ~20 lines, via the two-registry builder API.
 
 Federated CIFAR-like classification on non-IID clients: compare Local SOAP
 (Alg. 1, drifting preconditioners) against FedPAC_SOAP (Alg. 2) and its
 bandwidth-light variant (rank-8 factored Theta on the wire — the reported
 MB/round is measured from the encoded wire messages, see
 ``repro.core.transport``).
+
+The task is one registered scenario name — data, Dirichlet(0.1) partition,
+CNN, loss/eval and batching all come from the ``cifar_like_cnn`` catalog
+entry (``repro.scenarios``); no hand-rolled wiring.
 
   PYTHONPATH=src python examples/quickstart.py
 
@@ -13,41 +17,26 @@ QUICKSTART_ROUNDS / QUICKSTART_SAMPLES shrink the run (CI smoke job).
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
+import dataclasses
 
-from repro.api import build_experiment
-from repro.data import make_image_classification, dirichlet_partition
-from repro.models.vision import init_cnn, cnn_apply, classification_loss, accuracy
+from repro.api import build_experiment, materialize, resolve_scenario
 
 ROUNDS = int(os.environ.get("QUICKSTART_ROUNDS", "15"))
 N = int(os.environ.get("QUICKSTART_SAMPLES", "3000"))
 
-# --- data: 10 clients, Dirichlet(0.1) label skew (strongly non-IID) -------
-X, y = make_image_classification(N, image_size=12, n_classes=8, noise=2.0)
-parts = dirichlet_partition(y, n_clients=10, alpha=0.1)
-n_eval = max(N // 5, 100)
-Xe, ye = jnp.asarray(X[-n_eval:]), jnp.asarray(y[-n_eval:])
-
-params = init_cnn(jax.random.key(0), n_classes=8, width=8, blocks=2)
-
-def loss_fn(p, batch):
-    return classification_loss(cnn_apply(p, batch["x"]), batch["y"])
-
-def eval_fn(p):
-    return {"test_acc": accuracy(cnn_apply(p, Xe), ye)}
-
-def batch_fn(cid, rng):
-    idx = rng.choice(parts[cid], size=16)
-    return {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+# --- the task: 10 clients, Dirichlet(0.1) label skew (strongly non-IID) ---
+# materialized once: all three algorithms share the data, partition, params
+# and jitted eval
+spec = resolve_scenario("cifar_like_cnn")
+scenario = materialize(
+    dataclasses.replace(spec, source_kwargs=dict(spec.source_kwargs, n=N)))
 
 # --- run the algorithms ----------------------------------------------------
 for algo in ["local_soap", "fedpac_soap", "fedpac_soap_light"]:
-    exp = build_experiment(algo, params=params, loss_fn=loss_fn,
-                           client_batch_fn=batch_fn, eval_fn=eval_fn,
-                           n_clients=10, participation=0.5, rounds=ROUNDS,
-                           local_steps=5, beta=0.5)
+    exp = build_experiment(algo, scenario=scenario, participation=0.5,
+                           rounds=ROUNDS, local_steps=5, beta=0.5)
     hist = exp.run()
     print(f"{algo:14s} acc={hist[-1]['test_acc']:.3f} "
           f"loss={hist[-1]['loss']:.3f} drift={hist[-1]['drift']:.2e} "
-          f"comm={exp.comm_bytes_per_round()/1e6:.2f} MB/round")
+          f"comm={exp.comm_bytes_per_round()/1e6:.2f} MB/round "
+          f"(label_tv={exp.scenario.partition_stats['label_tv']:.2f})")

@@ -1,22 +1,23 @@
-"""Top-level public API: the algorithm registry + the experiment builder.
+"""Top-level public API: two registries (algorithms x scenarios) + the one
+experiment builder.
 
     from repro.api import build_experiment
 
+    # declarative: a registered algorithm x a registered scenario
+    exp = build_experiment("fedpac_soap", scenario="cifar_like_cnn",
+                           rounds=30)
+    history = exp.run()
+
+    # or hand-rolled: the explicit problem bundle (legacy path, unchanged)
     exp = build_experiment("fedpac_soap", params=params, loss_fn=loss_fn,
                            client_batch_fn=batch_fn, eval_fn=eval_fn,
                            n_clients=20, participation=0.25, rounds=30)
-    history = exp.run()
 
-``build_experiment`` replaces the positional
-``make_experiment(fed, params, loss_fn, client_batch_fn, eval_fn,
-opt_kwargs, async_cfg)`` sprawl with a keyword builder that accepts either
-a registered algorithm name (every legacy paper-table string works), or an
-``AlgorithmSpec`` instance directly — including unregistered ones, so a
-custom algorithm is usable the moment it is constructed.
-
-Passing ``async_cfg`` selects the buffered-asynchronous runtime unless a
-runtime is named explicitly; any ``FedConfig`` field can be given as a
-keyword override.
+``build_experiment`` accepts either a registered name or a spec instance on
+*both* axes — an ``AlgorithmSpec`` / ``ScenarioSpec`` works the moment it is
+constructed, registered or not.  Passing ``async_cfg`` selects the
+buffered-asynchronous runtime unless a runtime is named explicitly; any
+``FedConfig`` field can be given as a keyword override.
 """
 from __future__ import annotations
 
@@ -27,6 +28,15 @@ from repro.core.algorithms import (  # noqa: F401  (re-exported API surface)
     AlgorithmSpec, ClientStateSpec, DuplicateAlgorithmError,
     UnknownAlgorithmError, register, registered, resolve,
 )
+from repro.scenarios import (  # noqa: F401  (re-exported API surface)
+    DuplicateScenarioError, PartitionSpec, Scenario, ScenarioSpec,
+    UnknownScenarioError, materialize,
+)
+from repro.scenarios import (
+    register as register_scenario,
+    registered as registered_scenarios,
+    resolve as resolve_scenario,
+)
 from repro.fed.base import FedExperiment, make_experiment  # noqa: F401
 from repro.fed.rounds import FedConfig, FederatedExperiment
 from repro.fed.async_runtime import (  # noqa: F401
@@ -35,33 +45,54 @@ from repro.fed.async_runtime import (  # noqa: F401
 
 __all__ = [
     "AlgorithmSpec", "AsyncConfig", "ClientStateSpec",
-    "DuplicateAlgorithmError", "FedConfig", "FedExperiment", "LatencyModel",
-    "UnknownAlgorithmError", "build_experiment", "make_experiment",
-    "register", "registered", "resolve",
+    "DuplicateAlgorithmError", "DuplicateScenarioError", "FedConfig",
+    "FedExperiment", "LatencyModel", "PartitionSpec", "Scenario",
+    "ScenarioSpec", "UnknownAlgorithmError", "UnknownScenarioError",
+    "build_experiment", "make_experiment", "materialize", "register",
+    "register_scenario", "registered", "registered_scenarios", "resolve",
+    "resolve_scenario",
 ]
 
 
 def build_experiment(
     algorithm: Union[str, AlgorithmSpec],
     *,
-    params,
-    loss_fn: Callable,
-    client_batch_fn: Callable,
+    scenario: Optional[Union[str, ScenarioSpec, Scenario]] = None,
+    scenario_seed: Optional[int] = None,
+    params=None,
+    loss_fn: Optional[Callable] = None,
+    client_batch_fn: Optional[Callable] = None,
     eval_fn: Optional[Callable] = None,
     opt_kwargs: Optional[dict] = None,
     async_cfg: Optional[AsyncConfig] = None,
     fed: Optional[FedConfig] = None,
     **fed_overrides,
 ) -> FedExperiment:
-    """Build the right runtime for ``algorithm`` with keyword configuration.
+    """Build the right runtime for ``algorithm`` on ``scenario`` (or on an
+    explicit problem bundle) with keyword configuration.
 
     algorithm: registered name (``"fedpac_soap"``, any legacy table string)
-      or an ``AlgorithmSpec`` — unregistered specs work too.
+      or an ``AlgorithmSpec`` — unregistered specs work.
+    scenario: registered name (``"cifar_like_cnn"``, any catalog entry), a
+      ``ScenarioSpec`` (unregistered specs work here too), or an
+      already-materialized ``Scenario`` bundle (sweeps: materialize once,
+      reuse across algorithms — data, partition, and jitted eval are
+      shared).  Names/specs are materialized with ``scenario_seed``
+      (default: the fed config's seed) and the resolved ``n_clients``;
+      when the caller names no cohort size at all, the scenario's own
+      ``n_clients`` becomes the config's.  A pre-materialized bundle must
+      agree with the config's ``n_clients`` and ``scenario_seed``.
+      Mutually exclusive with the explicit ``params``/``loss_fn``/
+      ``client_batch_fn``/``eval_fn`` bundle, which keeps working
+      unchanged.
     fed: optional base ``FedConfig``; ``fed_overrides`` are applied on top
       (``rounds=30, n_clients=20, runtime="async", ...``).
     async_cfg: execution-model knobs; implies ``runtime="async"`` when no
       config was passed at all — an explicit ``fed`` config or ``runtime``
       override is authoritative, and a sync one + async_cfg is an error.
+
+    The materialized bundle is exposed as ``exp.scenario`` (None on the
+    explicit path), including ``partition_stats`` for sweep reporting.
     """
     spec = resolve(algorithm)
     base = fed if fed is not None else FedConfig()
@@ -69,14 +100,60 @@ def build_experiment(
     if async_cfg is not None and fed is None and "runtime" not in \
             fed_overrides:
         changes["runtime"] = "async"
+
+    scn = None
+    if scenario is not None:
+        explicit = [n for n, v in [("params", params), ("loss_fn", loss_fn),
+                                   ("client_batch_fn", client_batch_fn),
+                                   ("eval_fn", eval_fn)] if v is not None]
+        if explicit:
+            raise ValueError(
+                "pass either scenario= or the explicit problem bundle, not "
+                f"both (got scenario plus {', '.join(explicit)})")
+        premade = isinstance(scenario, Scenario)
+        scn_n_clients = (scenario.n_clients if premade
+                         else resolve_scenario(scenario).n_clients)
+        if fed is None and "n_clients" not in changes:
+            changes["n_clients"] = scn_n_clients
+    elif scenario_seed is not None:
+        raise ValueError("scenario_seed only applies together with "
+                         "scenario=")
+
     cfg = dataclasses.replace(base, **changes)
+
+    if scenario is not None:
+        if premade:
+            if scenario.n_clients != cfg.n_clients:
+                raise ValueError(
+                    f"pre-materialized scenario {scenario.spec.name!r} was "
+                    f"built for n_clients={scenario.n_clients} but the "
+                    f"config says {cfg.n_clients} — re-materialize or drop "
+                    "the override")
+            if scenario_seed is not None and scenario_seed != scenario.seed:
+                raise ValueError(
+                    f"pre-materialized scenario {scenario.spec.name!r} was "
+                    f"built with seed={scenario.seed} but "
+                    f"scenario_seed={scenario_seed} was requested")
+            scn = scenario
+        else:
+            seed = scenario_seed if scenario_seed is not None else cfg.seed
+            scn = materialize(scenario, seed=seed, n_clients=cfg.n_clients)
+        params, loss_fn, client_batch_fn, eval_fn = scn.problem()
+    elif params is None or loss_fn is None or client_batch_fn is None:
+        raise TypeError(
+            "build_experiment needs either scenario= or the explicit "
+            "params/loss_fn/client_batch_fn bundle")
+
     if cfg.runtime == "sync":
         if async_cfg is not None:
             raise ValueError(
                 "async_cfg given but the config says runtime='sync' — set "
                 "runtime='async' (or drop the async_cfg)")
-        return FederatedExperiment(cfg, params, loss_fn, client_batch_fn,
-                                   eval_fn, opt_kwargs, spec=spec)
-    return AsyncFederatedExperiment(cfg, params, loss_fn, client_batch_fn,
-                                    eval_fn, opt_kwargs, async_cfg=async_cfg,
-                                    spec=spec)
+        exp = FederatedExperiment(cfg, params, loss_fn, client_batch_fn,
+                                  eval_fn, opt_kwargs, spec=spec)
+    else:
+        exp = AsyncFederatedExperiment(cfg, params, loss_fn, client_batch_fn,
+                                       eval_fn, opt_kwargs,
+                                       async_cfg=async_cfg, spec=spec)
+    exp.scenario = scn
+    return exp

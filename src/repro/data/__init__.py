@@ -1,2 +1,8 @@
-from repro.data.partition import dirichlet_partition, heterogeneity_stat
-from repro.data.synth import make_image_classification, make_lm_corpus, lm_batches
+from repro.data.partition import (
+    dirichlet_partition, heterogeneity_stat, iid_partition, partition_stats,
+    quantity_partition, shard_partition,
+)
+from repro.data.synth import (
+    lm_batches, make_image_classification, make_lm_corpus,
+    make_lm_topic_corpus,
+)

@@ -1,23 +1,50 @@
-"""Dirichlet(alpha) non-IID partitioner (Hsu et al. 2019) — the paper's
-heterogeneity control.  Smaller alpha => more severe label skew (Dir-0.1,
-Dir-0.05 in the paper's tables).
+"""Client partitioners — the heterogeneity axis of a federated scenario.
+
+``dirichlet_partition`` (Hsu et al. 2019) is the paper's severity control:
+smaller alpha => more severe label skew (Dir-0.1, Dir-0.05 in the tables).
+The scenario API (``repro.scenarios.PartitionSpec``) additionally exposes
+
+* ``shard_partition``    — pathological label split (McMahan et al. 2017):
+                           sort by label, deal a fixed number of shards to
+                           each client, so each sees few classes;
+* ``quantity_partition`` — label-IID but Dirichlet-skewed client sizes;
+* ``iid_partition``      — uniform random split (the control condition).
+
+All partitioners return a list of ``n_clients`` index arrays covering every
+sample exactly once, and are deterministic in ``seed``.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
 
 def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
-                        seed: int = 0, min_size: int = 2):
+                        seed: int = 0, min_size: int = 2,
+                        max_retries: int = 20):
     """Returns list of index arrays, one per client.
 
     Every sample is assigned to exactly one client; per-class proportions are
-    drawn from Dirichlet(alpha).
+    drawn from Dirichlet(alpha).  Degenerate draws that leave some client
+    below ``min_size`` are retried with a softened alpha (x1.5 each time) at
+    most ``max_retries`` times; softening is reported with a
+    ``RuntimeWarning`` naming the effective alpha actually used, and an
+    infeasible request (or retry exhaustion) raises ``ValueError`` instead
+    of spinning forever.
     """
+    if alpha <= 0:
+        raise ValueError(f"alpha must be > 0, got {alpha}")
     rng = np.random.default_rng(seed)
     labels = np.asarray(labels)
+    if n_clients * min_size > len(labels):
+        raise ValueError(
+            f"dirichlet_partition is infeasible: n_clients={n_clients} x "
+            f"min_size={min_size} needs {n_clients * min_size} samples but "
+            f"only {len(labels)} are available")
     n_classes = int(labels.max()) + 1
-    while True:
+    requested = alpha
+    for attempt in range(max_retries + 1):
         idx_per_client = [[] for _ in range(n_clients)]
         for c in range(n_classes):
             idx_c = np.where(labels == c)[0]
@@ -30,10 +57,79 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
                  for p in idx_per_client]
         if min(len(p) for p in parts) >= min_size:
             break
-        alpha = alpha * 1.5  # degenerate draw; soften slightly and retry
+        if attempt < max_retries:  # degenerate draw; soften and retry
+            alpha = alpha * 1.5    # (guarded so the error below reports
+            #                         the largest alpha actually tried)
+    else:
+        raise ValueError(
+            f"dirichlet_partition gave up after {max_retries} retries: "
+            f"alpha softened {requested:g} -> {alpha:g} without every "
+            f"client reaching min_size={min_size} ({len(labels)} samples, "
+            f"{n_clients} clients) — lower min_size/n_clients or raise "
+            "alpha")
+    if alpha != requested:
+        warnings.warn(
+            f"dirichlet_partition: degenerate draws at alpha={requested:g}; "
+            f"effective alpha={alpha:g} after softening retries",
+            RuntimeWarning, stacklevel=2)
     for p in parts:
         rng.shuffle(p)
     return parts
+
+
+def iid_partition(n_samples: int, n_clients: int, seed: int = 0):
+    """Uniform random split of ``n_samples`` indices into ``n_clients``."""
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n_samples)
+    return np.array_split(idx, n_clients)
+
+
+def shard_partition(labels: np.ndarray, n_clients: int,
+                    shards_per_client: int = 2, seed: int = 0):
+    """Pathological label split: sort by label, deal shards to clients.
+
+    With ``shards_per_client`` small each client sees only a handful of
+    classes — the classic extreme non-IID setting of McMahan et al. 2017.
+    """
+    if shards_per_client < 1:
+        raise ValueError(
+            f"shards_per_client must be >= 1, got {shards_per_client}")
+    labels = np.asarray(labels)
+    n_shards = n_clients * shards_per_client
+    if n_shards > len(labels):
+        raise ValueError(
+            f"shard_partition is infeasible: {n_shards} shards for "
+            f"{len(labels)} samples")
+    rng = np.random.default_rng(seed)
+    order = np.argsort(labels, kind="stable")
+    shards = np.array_split(order, n_shards)
+    deal = rng.permutation(n_shards)
+    parts = []
+    for i in range(n_clients):
+        own = deal[i * shards_per_client:(i + 1) * shards_per_client]
+        p = np.concatenate([shards[s] for s in own])
+        rng.shuffle(p)
+        parts.append(p)
+    return parts
+
+
+def quantity_partition(n_samples: int, n_clients: int, alpha: float = 0.5,
+                       seed: int = 0, min_size: int = 1):
+    """Quantity skew: label-IID clients with Dirichlet(alpha)-skewed sizes."""
+    if alpha <= 0:
+        raise ValueError(f"alpha must be > 0, got {alpha}")
+    if n_clients * min_size > n_samples:
+        raise ValueError(
+            f"quantity_partition is infeasible: n_clients={n_clients} x "
+            f"min_size={min_size} needs {n_clients * min_size} samples but "
+            f"only {n_samples} are available")
+    rng = np.random.default_rng(seed)
+    props = rng.dirichlet(np.full(n_clients, alpha))
+    spare = n_samples - n_clients * min_size
+    cuts = (np.cumsum(props) * spare).astype(int)[:-1]
+    sizes = np.diff(np.concatenate([[0], cuts, [spare]])) + min_size
+    idx = rng.permutation(n_samples)
+    return np.split(idx, np.cumsum(sizes)[:-1])
 
 
 def heterogeneity_stat(parts, labels, n_classes=None) -> float:
@@ -48,3 +144,14 @@ def heterogeneity_stat(parts, labels, n_classes=None) -> float:
         cp = np.bincount(labels[p], minlength=n_classes) / len(p)
         tvs.append(0.5 * np.abs(cp - global_p).sum())
     return float(np.mean(tvs))
+
+
+def partition_stats(parts, labels=None) -> dict:
+    """Summary of one partition: sizes and (with labels) label-skew TV."""
+    sizes = [int(len(p)) for p in parts]
+    stats = {"n_clients": len(parts), "n_samples": int(sum(sizes)),
+             "min_size": min(sizes), "max_size": max(sizes),
+             "mean_size": float(np.mean(sizes))}
+    if labels is not None:
+        stats["label_tv"] = heterogeneity_stat(parts, labels)
+    return stats

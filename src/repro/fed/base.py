@@ -27,10 +27,14 @@ class FedExperiment(abc.ABC):
     Contract declared here (not ad hoc in subclasses):
       fed      — the experiment config; must expose an int ``rounds``
       history  — list of per-round metric dicts, appended by run_round()
+      scenario — the materialized ``repro.scenarios.Scenario`` bundle when
+                 the experiment was built from a declarative scenario
+                 (``build_experiment(..., scenario=...)``); None otherwise
     """
 
     fed: "FedConfig"     # noqa: F821 — any config with an int .rounds
     history: list
+    scenario = None      # set by repro.api.build_experiment
 
     def __init__(self, fed):
         rounds = getattr(fed, "rounds", None)
@@ -51,9 +55,18 @@ class FedExperiment(abc.ABC):
     def comm_bytes_per_round(self) -> int:
         """Per-client upload bytes for one round (Table 6 accounting)."""
 
+    @staticmethod
+    def format_metric(v):
+        """4-decimal rounding for floats; everything else (ints, None,
+        strings, arrays from custom eval fns) passes through untouched."""
+        try:
+            return round(v, 4)
+        except TypeError:
+            return v
+
     def log_round(self, rec: dict, r: int) -> None:
         """Per-round logging hook; override to route metrics elsewhere."""
-        print({k: round(v, 4) for k, v in rec.items()})
+        print({k: self.format_metric(v) for k, v in rec.items()})
 
     def run(self, rounds: Optional[int] = None, log_every: int = 0):
         """Run ``rounds`` model updates (default: ``self.fed.rounds``)."""

@@ -87,7 +87,7 @@ def main(argv=None):
     for r in range(fed.rounds):
         rec = exp.run_round()
         hist.append(rec)
-        print({k: round(v, 4) for k, v in rec.items()})
+        exp.log_round(rec, r)
         if mgr and (r + 1) % args.checkpoint_every == 0:
             mgr.save(exp.server)
     print(f"final: train_loss={hist[-1]['loss']:.4f} "

@@ -5,3 +5,6 @@ from repro.models.model import (
     init_params, init_boxed, param_axes, param_shapes, num_params,
     forward, loss_fn, prefill, decode_step, init_caches,
 )
+from repro.models.vision import (
+    accuracy, classification_loss, cnn_apply, init_cnn, init_vit, vit_apply,
+)

@@ -1,0 +1,29 @@
+"""First-class scenario API: declarative federated tasks.
+
+A scenario — data source x partition x model x eval — is registered data,
+exactly like an algorithm (``core.algorithms``):
+
+    from repro.scenarios import ScenarioSpec, PartitionSpec, register
+
+    register(ScenarioSpec(name="my_task", source="synth_image",
+                          partition=PartitionSpec("dirichlet", alpha=0.05)))
+
+and consumed by name (or as an unregistered spec) through the one builder:
+
+    from repro.api import build_experiment
+    exp = build_experiment("fedpac_soap", scenario="cifar_like_cnn",
+                           rounds=30)
+
+``materialize(spec, seed)`` produces the concrete ``Scenario`` bundle —
+``(params, loss_fn, client_batch_fn, eval_fn, partition_stats)`` — both
+runtimes consume; the registered catalog lives in ``scenarios.catalog``.
+"""
+from repro.scenarios.spec import (  # noqa: F401
+    DuplicateScenarioError, PARTITION_KINDS, PartitionSpec, Scenario,
+    ScenarioSpec, UnknownScenarioError,
+)
+from repro.scenarios.registry import (  # noqa: F401
+    get, materialize, register, register_source, registered, resolve,
+    resolve_source,
+)
+from repro.scenarios.catalog import cifar_like, lm_zipf  # noqa: F401

@@ -1,0 +1,107 @@
+"""The scenario registry: ``register`` / ``resolve`` / ``materialize``.
+
+Mirrors the algorithm registry (``core.algorithms``): registered names
+resolve to frozen ``ScenarioSpec`` values, duplicates and unknowns raise
+typed errors, and unregistered specs pass straight through ``resolve`` so a
+custom scenario is usable the moment it is constructed.
+
+Source families (the pluggable data factories) register here too:
+``register_source(name, fn)`` with ``fn(spec, seed, n_clients) ->
+Scenario``.  The built-in families (``synth_image`` in ``scenarios.vision``,
+``lm_zipf`` in ``scenarios.lm``) self-register when the package imports the
+catalog, so a spec's source key is always validated against a fully
+populated source table.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Union
+
+from repro.scenarios.spec import (
+    DuplicateScenarioError, Scenario, ScenarioSpec, UnknownScenarioError,
+)
+
+_REGISTRY: dict = {}
+_SOURCES: dict = {}
+
+
+def register_source(name: str, fn: Callable, *,
+                    overwrite: bool = False) -> Callable:
+    """Add a data-source family: ``fn(spec, seed, n_clients) -> Scenario``."""
+    if name in _SOURCES and not overwrite:
+        raise DuplicateScenarioError(
+            f"scenario source {name!r} is already registered "
+            "(pass overwrite=True to replace it)")
+    _SOURCES[name] = fn
+    return fn
+
+
+def resolve_source(spec: ScenarioSpec) -> Callable:
+    """The materializer for ``spec`` — its callable source, or the
+    registered family named by its source key."""
+    if callable(spec.source):
+        return spec.source
+    if spec.source not in _SOURCES:
+        raise UnknownScenarioError(
+            f"scenario {spec.name!r} names unknown source {spec.source!r} "
+            f"(registered sources: {', '.join(sorted(_SOURCES))}); add new "
+            "families via repro.scenarios.register_source")
+    return _SOURCES[spec.source]
+
+
+def register(spec: ScenarioSpec, *, overwrite: bool = False) -> ScenarioSpec:
+    """Add ``spec`` to the registry; returns it for chaining."""
+    if not isinstance(spec, ScenarioSpec):
+        raise TypeError(f"register wants a ScenarioSpec, got {type(spec)}")
+    if isinstance(spec.source, str) and spec.source not in _SOURCES:
+        raise ValueError(
+            f"spec {spec.name!r} names unknown source {spec.source!r} "
+            f"(registered sources: {', '.join(sorted(_SOURCES))}); add new "
+            "families via repro.scenarios.register_source")
+    if spec.name in _REGISTRY and not overwrite:
+        raise DuplicateScenarioError(
+            f"scenario {spec.name!r} is already registered "
+            "(pass overwrite=True to replace it)")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def registered() -> tuple:
+    """Sorted names of all registered scenarios."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> ScenarioSpec:
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    raise UnknownScenarioError(
+        f"unknown scenario {name!r}: registered scenarios are "
+        f"{', '.join(registered())}; add new ones via "
+        "repro.scenarios.register")
+
+
+def resolve(spec_or_name: Union[str, ScenarioSpec]) -> ScenarioSpec:
+    """Spec passes through; strings resolve against the registry."""
+    if isinstance(spec_or_name, ScenarioSpec):
+        return spec_or_name
+    return get(str(spec_or_name))
+
+
+def materialize(scenario: Union[str, ScenarioSpec], seed: int = 0,
+                n_clients: Optional[int] = None) -> Scenario:
+    """Turn a declarative spec into the concrete problem bundle.
+
+    ``n_clients`` defaults to the spec's own; the override is what
+    ``build_experiment`` passes when the fed config names a cohort size.
+    The result's ``problem()`` is the legacy 4-tuple
+    ``(params, loss_fn, client_batch_fn, eval_fn)``.
+    """
+    spec = resolve(scenario)
+    n = spec.n_clients if n_clients is None else int(n_clients)
+    if n < 1:
+        raise ValueError(f"n_clients must be >= 1, got {n}")
+    scn = resolve_source(spec)(spec, int(seed), n)
+    if not isinstance(scn, Scenario):
+        raise TypeError(
+            f"source for scenario {spec.name!r} returned {type(scn)}; "
+            "materializers must return a scenarios.Scenario")
+    return scn

@@ -1,0 +1,191 @@
+"""Declarative scenario data model: what a federated task *is*.
+
+A scenario is the second axis of the experiment API (the first is the
+algorithm, ``core.algorithms.AlgorithmSpec``): a frozen ``ScenarioSpec``
+declares data source x partition x model x batching declaratively, and
+``materialize`` (``scenarios.registry``) turns it into the concrete
+``Scenario`` bundle — ``(params, loss_fn, client_batch_fn, eval_fn,
+partition_stats)`` — that both runtimes consume through
+``repro.api.build_experiment(algorithm, scenario=...)``.
+
+``PartitionSpec`` is the heterogeneity control: it names one of the
+standard partitioners (``repro.data.partition``) plus its severity knob,
+so "the same task under Dir-0.1 / Dir-0.05 / shard / IID" is a one-field
+variation instead of re-plumbed wiring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional, Union
+
+import numpy as np
+
+from repro.data.partition import (
+    dirichlet_partition, iid_partition, quantity_partition, shard_partition,
+)
+
+
+class UnknownScenarioError(ValueError):
+    """Name resolves to no registered ``ScenarioSpec``."""
+
+
+class DuplicateScenarioError(ValueError):
+    """``register`` called twice for the same scenario name."""
+
+
+PARTITION_KINDS = ("dirichlet", "shard", "quantity", "iid")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """How samples (or documents) are split across clients.
+
+    kind: one of ``PARTITION_KINDS``; ``alpha`` is the Dirichlet
+    concentration for ``dirichlet`` (label skew) and ``quantity`` (size
+    skew); ``shards_per_client`` drives the pathological ``shard`` split.
+    """
+    kind: str = "dirichlet"
+    alpha: float = 0.1
+    shards_per_client: int = 2
+    min_size: int = 2
+
+    def __post_init__(self):
+        if self.kind not in PARTITION_KINDS:
+            raise ValueError(
+                f"unknown partition kind {self.kind!r} "
+                f"(want one of {PARTITION_KINDS})")
+        if self.kind in ("dirichlet", "quantity") and self.alpha <= 0:
+            raise ValueError(f"alpha must be > 0, got {self.alpha}")
+        if self.shards_per_client < 1:
+            raise ValueError(
+                f"shards_per_client must be >= 1, got "
+                f"{self.shards_per_client}")
+
+    def build(self, labels: Optional[np.ndarray], n_samples: int,
+              n_clients: int, seed: int):
+        """Materialize the split: list of ``n_clients`` index arrays."""
+        if self.kind == "iid":
+            return iid_partition(n_samples, n_clients, seed=seed)
+        if self.kind == "quantity":
+            return quantity_partition(n_samples, n_clients, self.alpha,
+                                      seed=seed, min_size=self.min_size)
+        if labels is None:
+            raise ValueError(
+                f"partition kind {self.kind!r} needs labels, but this "
+                "scenario's data source provides none")
+        if self.kind == "dirichlet":
+            return dirichlet_partition(labels, n_clients, self.alpha,
+                                       seed=seed, min_size=self.min_size)
+        return shard_partition(labels, n_clients,
+                               shards_per_client=self.shards_per_client,
+                               seed=seed)
+
+    def tag(self) -> str:
+        """Short name for sweep rows / derived-variant names."""
+        if self.kind == "dirichlet":
+            return f"dir{self.alpha:g}"
+        if self.kind == "quantity":
+            return f"qty{self.alpha:g}"
+        if self.kind == "shard":
+            return f"shard{self.shards_per_client}"
+        return "iid"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One federated task, declaratively.
+
+    source: data-source family — a key in the source registry
+      (``"synth_image"``, ``"lm_zipf"``; extend via
+      ``scenarios.register_source``) or a callable materializer
+      ``(spec, seed, n_clients) -> Scenario`` for fully custom tasks.
+    partition: the heterogeneity axis (``PartitionSpec``).
+    model: model-factory key understood by the source family
+      (vision: ``"cnn"`` | ``"vit"``; LM: ``"transformer_lm"``).
+    n_clients / batch_size: task-level defaults; ``build_experiment``
+      overrides ``n_clients`` from the fed config when the caller sets it.
+    source_kwargs / model_kwargs: family-specific knobs (sample counts,
+      image size, vocab, model width, ...), applied over the family's
+      defaults.
+    """
+    name: str
+    source: Union[str, Callable] = "synth_image"
+    partition: PartitionSpec = PartitionSpec()
+    model: str = "cnn"
+    n_clients: int = 10
+    batch_size: int = 16
+    source_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    model_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    description: str = ""
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("a ScenarioSpec needs a non-empty name")
+        if self.n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1, got {self.n_clients}")
+        if self.batch_size < 1:
+            raise ValueError(
+                f"batch_size must be >= 1, got {self.batch_size}")
+
+    # ------------------------------------------------------------ variants
+
+    def with_partition(self, partition: PartitionSpec,
+                       suffix: Optional[str] = None) -> "ScenarioSpec":
+        """Derived variant of the same task under another partition.
+
+        The derived spec is unregistered (usable directly, like unregistered
+        ``AlgorithmSpec`` values); its name gains the partition tag.
+        """
+        return dataclasses.replace(
+            self, partition=partition,
+            name=f"{self.name}@{suffix or partition.tag()}")
+
+    def variant(self, suffix: str, **changes) -> "ScenarioSpec":
+        """Renamed derived spec with field overrides (registry helpers)."""
+        return dataclasses.replace(self, name=f"{self.name}_{suffix}",
+                                   **changes)
+
+
+def check_source_kwargs(spec: "ScenarioSpec", defaults: Mapping) -> dict:
+    """Defaults overlaid with the spec's knobs; unknown keys are an error
+    (a typo'd knob must not silently run the wrong experiment)."""
+    unknown = set(spec.source_kwargs) - set(defaults)
+    if unknown:
+        raise ValueError(
+            f"scenario {spec.name!r}: unknown source_kwargs "
+            f"{sorted(unknown)} (this source understands "
+            f"{sorted(defaults)})")
+    kw = dict(defaults)
+    kw.update(spec.source_kwargs)
+    return kw
+
+
+@dataclasses.dataclass
+class Scenario:
+    """A materialized scenario: the concrete problem both runtimes consume.
+
+    ``problem()`` returns the legacy 4-tuple
+    ``(params, loss_fn, client_batch_fn, eval_fn)`` —
+    ``benchmarks.common.make_fed_vision_problem`` is a thin adapter over it.
+
+    partitions: per-client index arrays into the source's training set
+      (None for sources that synthesize per-client data directly).
+    partition_stats: sizes + label-skew summary
+      (``repro.data.partition.partition_stats``).
+    meta: family-specific extras (model config, eval-set sizes, ...).
+    """
+    spec: ScenarioSpec
+    seed: int
+    n_clients: int
+    params: Any
+    loss_fn: Callable
+    client_batch_fn: Callable
+    eval_fn: Optional[Callable]
+    partitions: Optional[list] = None
+    partition_stats: dict = dataclasses.field(default_factory=dict)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def problem(self):
+        """The legacy positional bundle (params, loss, batch, eval)."""
+        return (self.params, self.loss_fn, self.client_batch_fn,
+                self.eval_fn)

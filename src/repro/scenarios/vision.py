@@ -1,0 +1,102 @@
+"""``synth_image`` source family: Dirichlet/shard/quantity/IID-partitioned
+synthetic image classification (CIFAR-like gaussian mixtures) with CNN or
+ViT backbones.
+
+Materialization is bitwise-faithful to the legacy
+``benchmarks.common.make_fed_vision_problem`` wiring (same data, partition,
+init and batch RNG consumption), which is what the golden equivalence test
+pins: declaring the task did not change the task.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import make_image_classification, partition_stats
+from repro.models.vision import (
+    accuracy, classification_loss, cnn_apply, init_cnn, init_vit, vit_apply,
+)
+from repro.scenarios.registry import register_source
+from repro.scenarios.spec import Scenario, ScenarioSpec, check_source_kwargs
+
+SOURCE_DEFAULTS = dict(n=3000, image_size=12, n_classes=8, noise=2.5,
+                       n_eval=768)
+
+
+def _make_cnn(seed: int, *, image_size: int, n_classes: int, width: int = 8,
+              blocks: int = 2):
+    del image_size  # fully convolutional
+    params = init_cnn(jax.random.key(seed), n_classes=n_classes, width=width,
+                      blocks=blocks)
+    return params, cnn_apply
+
+
+def _make_vit(seed: int, *, image_size: int, n_classes: int, patch: int = 4,
+              d_model: int = 48, layers: int = 2, heads: int = 2):
+    params, meta = init_vit(jax.random.key(seed), image_size=image_size,
+                            patch=patch, d_model=d_model, layers=layers,
+                            heads=heads, n_classes=n_classes)
+    return params, lambda p, x: vit_apply(p, meta, x)
+
+
+VISION_MODELS = {"cnn": _make_cnn, "vit": _make_vit}
+
+
+def register_vision_model(name: str, factory: Callable) -> Callable:
+    """Add a vision backbone: ``factory(seed, image_size=, n_classes=,
+    **model_kwargs) -> (params, apply_fn)``."""
+    VISION_MODELS[name] = factory
+    return factory
+
+
+def materialize_vision(spec: ScenarioSpec, seed: int,
+                       n_clients: int) -> Scenario:
+    kw = check_source_kwargs(spec, SOURCE_DEFAULTS)
+    n, n_eval = kw["n"], kw["n_eval"]
+    image_size, n_classes = kw["image_size"], kw["n_classes"]
+    if spec.model not in VISION_MODELS:
+        raise ValueError(
+            f"scenario {spec.name!r}: unknown vision model {spec.model!r} "
+            f"(want one of {sorted(VISION_MODELS)}); add backbones via "
+            "scenarios.vision.register_vision_model")
+
+    X_all, y_all = make_image_classification(
+        n + n_eval, image_size=image_size, n_classes=n_classes, seed=seed,
+        noise=kw["noise"])
+    X, y = X_all[:n], y_all[:n]
+    Xe, ye = jnp.asarray(X_all[n:]), jnp.asarray(y_all[n:])
+    parts = spec.partition.build(y, n, n_clients, seed)
+    params, apply = VISION_MODELS[spec.model](
+        seed, image_size=image_size, n_classes=n_classes,
+        **dict(spec.model_kwargs))
+
+    def loss_fn(p, b):
+        return classification_loss(apply(p, b["x"]), b["y"])
+
+    @jax.jit
+    def eval_logits(p):
+        return apply(p, Xe)
+
+    def eval_fn(p):
+        logits = eval_logits(p)
+        return {"test_acc": accuracy(logits, ye),
+                "test_loss": classification_loss(logits, ye)}
+
+    batch = spec.batch_size
+
+    def batch_fn(cid, rng):
+        # fixed size (with replacement) so cohort batches stack
+        idx = rng.choice(parts[cid], size=batch, replace=True)
+        return {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return Scenario(
+        spec=spec, seed=seed, n_clients=n_clients, params=params,
+        loss_fn=loss_fn, client_batch_fn=batch_fn, eval_fn=eval_fn,
+        partitions=parts, partition_stats=partition_stats(parts, y),
+        meta={"n_train": n, "n_eval": n_eval, "n_classes": n_classes,
+              "image_size": image_size})
+
+
+register_source("synth_image", materialize_vision)

@@ -1,0 +1,462 @@
+"""Scenario API: registry semantics, golden bitwise equivalence with the
+legacy hand-rolled problem, catalog smoke through both runtimes, the new
+partitioners, and the data-layer validation satellites."""
+import dataclasses
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import (
+    AsyncConfig, FedConfig, build_experiment, resolve_scenario,
+)
+from repro.data import (
+    dirichlet_partition, iid_partition, lm_batches, make_image_classification,
+    make_lm_corpus, make_lm_topic_corpus, quantity_partition, shard_partition,
+)
+from repro.fed import FedExperiment, FederatedExperiment
+from repro.fed.async_runtime import AsyncFederatedExperiment
+from repro.models.vision import (
+    accuracy, classification_loss, cnn_apply, init_cnn,
+)
+from repro import scenarios
+from repro.scenarios import (
+    DuplicateScenarioError, PartitionSpec, Scenario, ScenarioSpec,
+    UnknownScenarioError, cifar_like, materialize,
+)
+
+# ------------------------------------------------------------------ registry
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(UnknownScenarioError) as ei:
+        scenarios.get("no_such_task")
+    assert "cifar_like_cnn" in str(ei.value)  # names the registered ones
+    with pytest.raises(UnknownScenarioError):
+        build_experiment("fedavg", scenario="no_such_task")
+
+
+def test_duplicate_scenario_rejected():
+    spec = ScenarioSpec(name="dup_test_scenario", source="synth_image")
+    scenarios.register(spec)
+    try:
+        with pytest.raises(DuplicateScenarioError):
+            scenarios.register(spec)
+        scenarios.register(dataclasses.replace(spec, batch_size=8),
+                           overwrite=True)
+        assert scenarios.get("dup_test_scenario").batch_size == 8
+    finally:
+        scenarios.registry._REGISTRY.pop("dup_test_scenario", None)
+
+
+def test_register_rejects_unknown_source_and_type():
+    with pytest.raises(ValueError, match="unknown source"):
+        scenarios.register(ScenarioSpec(name="bad_src", source="nope"))
+    with pytest.raises(TypeError):
+        scenarios.register("cifar_like_cnn")
+
+
+def test_duplicate_source_rejected():
+    with pytest.raises(DuplicateScenarioError):
+        scenarios.register_source("synth_image", lambda *a: None)
+
+
+def test_catalog_families_registered():
+    names = scenarios.registered()
+    for base in ("cifar_like_cnn", "cifar_like_vit", "lm_zipf"):
+        for v in ("", "_dir0.05", "_shard", "_iid"):
+            assert base + v in names
+
+
+def test_resolve_passes_specs_through():
+    spec = ScenarioSpec(name="inline", source="synth_image")
+    assert resolve_scenario(spec) is spec
+    assert resolve_scenario("cifar_like_cnn").name == "cifar_like_cnn"
+
+
+def test_specs_are_frozen():
+    spec = resolve_scenario("cifar_like_cnn")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.n_clients = 99
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.partition.alpha = 0.7
+
+
+def test_partition_spec_validation():
+    with pytest.raises(ValueError, match="unknown partition kind"):
+        PartitionSpec("banana")
+    with pytest.raises(ValueError, match="alpha"):
+        PartitionSpec("dirichlet", alpha=0.0)
+    with pytest.raises(ValueError, match="shards_per_client"):
+        PartitionSpec("shard", shards_per_client=0)
+
+
+def test_materialize_rejects_unknown_source_kwargs():
+    spec = dataclasses.replace(
+        resolve_scenario("cifar_like_cnn"),
+        source_kwargs={"n_samples": 100})  # typo for "n"
+    with pytest.raises(ValueError, match="unknown source_kwargs"):
+        materialize(spec)
+    spec = dataclasses.replace(resolve_scenario("lm_zipf"),
+                               source_kwargs={"vocabulary": 64})
+    with pytest.raises(ValueError, match="unknown source_kwargs"):
+        materialize(spec)
+
+
+def test_build_experiment_accepts_materialized_bundle():
+    spec = _ci_sized(resolve_scenario("cifar_like_cnn"))
+    bundle = materialize(spec, seed=5, n_clients=4)
+    exp = build_experiment("fedavg", scenario=bundle, rounds=1,
+                           scenario_seed=5)
+    assert exp.scenario is bundle and exp.fed.n_clients == 4
+    with pytest.raises(ValueError, match="n_clients"):
+        build_experiment("fedavg", scenario=bundle, n_clients=7)
+    with pytest.raises(ValueError, match="seed"):
+        build_experiment("fedavg", scenario=bundle, scenario_seed=6)
+
+
+def test_materialize_rejects_bad_source_results():
+    bad = ScenarioSpec(name="bad", source=lambda spec, seed, n: "nope")
+    with pytest.raises(TypeError, match="must return"):
+        materialize(bad)
+
+
+def test_materialize_rejects_nonpositive_n_clients():
+    with pytest.raises(ValueError, match="n_clients"):
+        materialize("cifar_like_cnn", n_clients=0)
+
+
+# ---------------------------------------------------- golden legacy problem
+
+
+def _legacy_fed_vision_problem(*, model="cnn", n=3000, image_size=12,
+                               n_classes=8, n_clients=10, alpha=0.1, seed=0,
+                               batch=16, noise=2.5):
+    """Frozen copy of the pre-scenario ``make_fed_vision_problem`` wiring
+    (benchmarks/common.py before the registry existed) — the golden
+    reference the registered ``cifar_like_cnn`` entry must reproduce
+    bitwise.  Returns the partition too for exact comparison."""
+    n_test = 768
+    X_all, y_all = make_image_classification(n + n_test,
+                                             image_size=image_size,
+                                             n_classes=n_classes, seed=seed,
+                                             noise=noise)
+    X, y = X_all[:n], y_all[:n]
+    Xe, ye = jnp.asarray(X_all[n:]), jnp.asarray(y_all[n:])
+    if alpha is None:  # IID
+        rng = np.random.default_rng(seed)
+        idx = rng.permutation(n)
+        parts = np.array_split(idx, n_clients)
+    else:
+        parts = dirichlet_partition(y, n_clients, alpha, seed=seed)
+    params = init_cnn(jax.random.key(seed), n_classes=n_classes, width=8,
+                      blocks=2)
+
+    def loss_fn(p, b):
+        return classification_loss(cnn_apply(p, b["x"]), b["y"])
+
+    @jax.jit
+    def eval_logits(p):
+        return cnn_apply(p, Xe)
+
+    def eval_fn(p):
+        logits = eval_logits(p)
+        return {"test_acc": accuracy(logits, ye),
+                "test_loss": classification_loss(logits, ye)}
+
+    def batch_fn(cid, rng):
+        idx = rng.choice(parts[cid], size=batch, replace=True)
+        return {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return params, loss_fn, batch_fn, eval_fn, parts
+
+
+GOLDEN_KW = dict(n=900, image_size=8, n_classes=4, n_clients=6, seed=0)
+
+
+def _golden_pair():
+    legacy = _legacy_fed_vision_problem(**GOLDEN_KW)
+    spec = cifar_like(model="cnn", n=GOLDEN_KW["n"],
+                      image_size=GOLDEN_KW["image_size"],
+                      n_classes=GOLDEN_KW["n_classes"],
+                      n_eval=768, alpha=0.1)
+    scn = materialize(spec, seed=GOLDEN_KW["seed"],
+                      n_clients=GOLDEN_KW["n_clients"])
+    return legacy, scn
+
+
+def test_golden_params_and_partition_bitwise():
+    (params_l, _, _, _, parts_l), scn = _golden_pair()
+    for a, b in zip(jax.tree.leaves(params_l), jax.tree.leaves(scn.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert len(parts_l) == len(scn.partitions)
+    for a, b in zip(parts_l, scn.partitions):
+        assert np.array_equal(a, b)
+
+
+def test_golden_iid_partition_matches_legacy_convention():
+    legacy = _legacy_fed_vision_problem(alpha=None, **GOLDEN_KW)
+    spec = cifar_like(model="cnn", n=GOLDEN_KW["n"],
+                      image_size=GOLDEN_KW["image_size"],
+                      n_classes=GOLDEN_KW["n_classes"], alpha=None)
+    scn = materialize(spec, seed=0, n_clients=GOLDEN_KW["n_clients"])
+    assert spec.partition.kind == "iid"
+    for a, b in zip(legacy[4], scn.partitions):
+        assert np.array_equal(a, b)
+
+
+def test_golden_first_round_metrics_sync():
+    (params, loss_fn, batch_fn, eval_fn, _), scn = _golden_pair()
+    fed = FedConfig(algorithm="fedpac_soap", n_clients=6, participation=0.5,
+                    rounds=1, local_steps=2, seed=0)
+    exp_legacy = FederatedExperiment(fed, params, loss_fn, batch_fn, eval_fn)
+    exp_scn = build_experiment("fedpac_soap", scenario=scn.spec,
+                               scenario_seed=0, fed=fed)
+    rec_l, rec_s = exp_legacy.run_round(), exp_scn.run_round()
+    assert rec_l.keys() == rec_s.keys()
+    for k in rec_l:
+        assert rec_l[k] == rec_s[k], k
+
+
+def test_golden_first_round_metrics_async():
+    (params, loss_fn, batch_fn, eval_fn, _), scn = _golden_pair()
+    fed = FedConfig(algorithm="fedpac_soap", n_clients=6, participation=0.5,
+                    rounds=1, local_steps=2, seed=0, runtime="async")
+    acfg = AsyncConfig(buffer_size=2)
+    exp_legacy = AsyncFederatedExperiment(fed, params, loss_fn, batch_fn,
+                                          eval_fn, async_cfg=acfg)
+    exp_scn = build_experiment("fedpac_soap", scenario=scn.spec,
+                               scenario_seed=0, fed=fed,
+                               async_cfg=AsyncConfig(buffer_size=2))
+    rec_l, rec_s = exp_legacy.run_round(), exp_scn.run_round()
+    assert rec_l.keys() == rec_s.keys()
+    for k in rec_l:
+        assert rec_l[k] == rec_s[k], k
+
+
+def test_legacy_adapter_is_the_scenario_path():
+    """benchmarks.common.make_fed_vision_problem is a thin scenario adapter."""
+    from benchmarks.common import make_fed_vision_problem
+    params_a, _, batch_a, _ = make_fed_vision_problem(**GOLDEN_KW)
+    (params_l, _, batch_l, _, _) = _legacy_fed_vision_problem(**GOLDEN_KW)
+    for a, b in zip(jax.tree.leaves(params_a), jax.tree.leaves(params_l)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    ba = batch_a(0, np.random.default_rng(3))
+    bl = batch_l(0, np.random.default_rng(3))
+    assert np.array_equal(np.asarray(ba["x"]), np.asarray(bl["x"]))
+    assert np.array_equal(np.asarray(ba["y"]), np.asarray(bl["y"]))
+
+
+# ------------------------------------------------------------- catalog smoke
+
+
+def _ci_sized(spec: ScenarioSpec) -> ScenarioSpec:
+    """Same scenario, CI-sized data/model (matches scenario_matrix quick)."""
+    if spec.source == "synth_image":
+        return dataclasses.replace(
+            spec, n_clients=6,
+            source_kwargs=dict(spec.source_kwargs, n=420, n_eval=64))
+    return dataclasses.replace(
+        spec, n_clients=4,
+        source_kwargs=dict(spec.source_kwargs, n_docs=48, tokens_per_doc=80,
+                           n_topics=8, n_eval_docs=2, vocab=64, seq_len=16,
+                           eval_batch=4),
+        model_kwargs=dict(spec.model_kwargs, layers=1, d_model=32))
+
+
+@pytest.mark.parametrize("name", scenarios.registered())
+def test_catalog_entry_smoke_sync_and_async(name):
+    spec = _ci_sized(resolve_scenario(name))
+    exp = build_experiment("fedpac_soap", scenario=spec, rounds=1,
+                           local_steps=1, participation=0.5)
+    rec = exp.run()[-1]
+    assert np.isfinite(rec["loss"])
+    assert exp.scenario.partition_stats["n_clients"] == spec.n_clients
+    exp = build_experiment("local_soap", scenario=spec,
+                           async_cfg=AsyncConfig(buffer_size=2), rounds=1,
+                           local_steps=1, participation=0.5)
+    rec = exp.run()[-1]
+    assert np.isfinite(rec["loss"])
+
+
+# -------------------------------------------------------- builder semantics
+
+
+def test_build_experiment_scenario_conflicts():
+    with pytest.raises(ValueError, match="not both"):
+        build_experiment("fedavg", scenario="cifar_like_cnn",
+                         params={"w": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="scenario_seed"):
+        build_experiment("fedavg", scenario_seed=3,
+                         params={"w": jnp.zeros(2)},
+                         loss_fn=lambda p, b: 0.0,
+                         client_batch_fn=lambda c, r: {})
+    with pytest.raises(TypeError, match="needs either"):
+        build_experiment("fedavg")
+
+
+def test_build_experiment_n_clients_resolution():
+    spec = _ci_sized(resolve_scenario("cifar_like_cnn"))  # n_clients=6
+    exp = build_experiment("fedavg", scenario=spec, rounds=1)
+    assert exp.fed.n_clients == 6
+    assert len(exp.scenario.partitions) == 6
+    exp = build_experiment("fedavg", scenario=spec, rounds=1, n_clients=3)
+    assert exp.fed.n_clients == 3
+    assert len(exp.scenario.partitions) == 3
+
+
+def test_unregistered_scenario_spec_usable_directly():
+    def toy_source(spec, seed, n_clients):
+        rng = np.random.default_rng(seed)
+        X = rng.normal(size=(64, 4)).astype(np.float32)
+        w = rng.normal(size=(4, 1)).astype(np.float32)
+
+        def loss_fn(p, b):
+            return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+        def batch_fn(cid, rng_):
+            idx = rng_.integers(0, 64, 8)
+            return {"x": X[idx], "y": X[idx] @ w}
+
+        return Scenario(spec=spec, seed=seed, n_clients=n_clients,
+                        params={"w": jnp.zeros((4, 1))}, loss_fn=loss_fn,
+                        client_batch_fn=batch_fn, eval_fn=None)
+
+    spec = ScenarioSpec(name="toy_linear", source=toy_source, n_clients=4)
+    assert "toy_linear" not in scenarios.registered()
+    exp = build_experiment("fedavg", scenario=spec, rounds=2, local_steps=2,
+                           participation=1.0)
+    hist = exp.run()
+    assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
+
+
+# ------------------------------------------------------------- partitioners
+
+
+def test_iid_partition_matches_legacy_formula():
+    rng = np.random.default_rng(5)
+    want = np.array_split(rng.permutation(103), 7)
+    got = iid_partition(103, 7, seed=5)
+    for a, b in zip(want, got):
+        assert np.array_equal(a, b)
+
+
+def _cover(parts, n):
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+
+
+def test_shard_partition_limits_labels_per_client():
+    labels = np.repeat(np.arange(10), 30)
+    parts = shard_partition(labels, n_clients=10, shards_per_client=2,
+                            seed=0)
+    _cover(parts, 300)
+    for p in parts:
+        # 2 shards -> at most 3 distinct labels (shard may straddle a class)
+        assert len(np.unique(labels[p])) <= 3
+    with pytest.raises(ValueError, match="infeasible"):
+        shard_partition(np.zeros(5, int), n_clients=3, shards_per_client=2)
+
+
+def test_quantity_partition_skews_sizes():
+    parts = quantity_partition(400, 8, alpha=0.3, seed=1, min_size=5)
+    _cover(parts, 400)
+    sizes = [len(p) for p in parts]
+    assert min(sizes) >= 5
+    assert max(sizes) > 2 * min(sizes)  # visibly skewed at alpha=0.3
+    with pytest.raises(ValueError, match="infeasible"):
+        quantity_partition(10, 4, min_size=5)
+
+
+def test_dirichlet_partition_infeasible_raises():
+    with pytest.raises(ValueError, match="infeasible"):
+        dirichlet_partition(np.zeros(10, int), n_clients=4, alpha=0.1,
+                            min_size=5)
+
+
+def test_dirichlet_partition_bounded_retries():
+    # one class, 12 samples, 4 clients, min_size=3: proportional cuts at a
+    # tiny alpha essentially never give every client 3 -> must raise (with
+    # the resolved alpha in the message), not spin forever
+    labels = np.zeros(12, int)
+    with pytest.raises(ValueError, match="alpha softened"):
+        dirichlet_partition(labels, n_clients=4, alpha=1e-6, min_size=3,
+                            max_retries=5)
+
+
+def test_dirichlet_partition_softening_warns_and_recovers():
+    labels = np.arange(64) % 8  # the lm_zipf document/topic shape
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        parts = dirichlet_partition(labels, n_clients=8, alpha=0.1, seed=0,
+                                    min_size=2)
+    _cover(parts, 64)
+    assert min(len(p) for p in parts) >= 2
+    msgs = [str(x.message) for x in w
+            if issubclass(x.category, RuntimeWarning)]
+    assert any("effective alpha" in m for m in msgs)
+
+
+# ------------------------------------------------------- synth validation
+
+
+def test_lm_batches_rejects_short_stream():
+    with pytest.raises(ValueError, match="longer than seq_len"):
+        lm_batches(np.arange(10), seq_len=16, batch=2, steps=1)
+    with pytest.raises(ValueError, match=">= 1"):
+        lm_batches(np.arange(100), seq_len=0, batch=2, steps=1)
+
+
+def test_make_lm_corpus_rejects_bad_hetero():
+    for h in (-0.1, 1.5):
+        with pytest.raises(ValueError, match="hetero"):
+            make_lm_corpus(2, 100, hetero=h)
+
+
+def test_make_lm_topic_corpus_shapes_and_validation():
+    docs, topics = make_lm_topic_corpus(12, 50, vocab=32, n_topics=4, seed=0)
+    assert docs.shape == (12, 50) and topics.shape == (12,)
+    assert docs.min() >= 0 and docs.max() < 32
+    assert topics.min() >= 0 and topics.max() < 4
+    with pytest.raises(ValueError, match="vocab"):
+        make_lm_topic_corpus(4, 10, vocab=1)
+    with pytest.raises(ValueError, match="n_docs"):
+        make_lm_topic_corpus(0, 10)
+
+
+# --------------------------------------------------------------- log_round
+
+
+class _Recorder(FedExperiment):
+    def __init__(self):
+        super().__init__(type("Cfg", (), {"rounds": 3})())
+        self.logged = []
+
+    def run_round(self):
+        rec = {"loss": 0.123456, "round": 2, "eval": None, "note": "skip",
+               "arr": np.zeros(2)}
+        self.history.append(rec)
+        return rec
+
+    def comm_bytes_per_round(self):
+        return 0
+
+    def log_round(self, rec, r):
+        self.logged.append({k: self.format_metric(v) for k, v in
+                            rec.items()})
+
+
+def test_log_round_handles_non_float_metrics(capsys):
+    exp = _Recorder()
+    exp.run(log_every=1)  # overridden hook: must not raise on None/str/array
+    assert exp.logged[0]["loss"] == 0.1235
+    assert exp.logged[0]["round"] == 2
+    assert exp.logged[0]["eval"] is None
+    assert exp.logged[0]["note"] == "skip"
+    # the default hook prints the same defensive formatting
+    FedExperiment.log_round(exp, exp.history[-1], 0)
+    out = capsys.readouterr().out
+    assert "0.1235" in out and "None" in out
