@@ -69,7 +69,7 @@ def run_algorithm(algo: str, params=None, loss_fn=None, batch_fn=None,
                   eval_fn=None, *, scenario=None, scenario_seed=None,
                   n_clients=10, participation=0.5, rounds=20, local_steps=5,
                   lr=None, beta=0.5, seed=0, svd_rank=8, theta_codec=None,
-                  delta_codec=None, error_feedback=True):
+                  delta_codec=None, error_feedback=True, trace_sink=None):
     """Run one algorithm on an explicit problem bundle or a scenario.
 
     ``scenario`` (a registered name or ``ScenarioSpec``) routes through
@@ -77,6 +77,11 @@ def run_algorithm(algo: str, params=None, loss_fn=None, batch_fn=None,
     defaults to the fed seed.  The vision Sophia lr override applies on
     both paths (every caller here is a vision-scale problem — LM tables
     drive ``build_experiment`` directly).
+
+    ``trace_sink`` (a ``repro.obs.Sink``) attaches the observability trace
+    before running — round events then carry the jit-pure telemetry
+    (drift, beta trajectory, ...) benchmarks can read instead of
+    recomputing from history.
     """
     if lr is None and "sophia" in algo:
         lr = VISION_LRS["sophia"]
@@ -94,6 +99,9 @@ def run_algorithm(algo: str, params=None, loss_fn=None, batch_fn=None,
         exp = build_experiment(algo, params=params, loss_fn=loss_fn,
                                client_batch_fn=batch_fn, eval_fn=eval_fn,
                                fed=fed)
+    if trace_sink is not None:
+        from repro.obs import attach
+        attach(exp, trace_sink)
     t0 = time.perf_counter()
     hist = exp.run()
     wall = time.perf_counter() - t0

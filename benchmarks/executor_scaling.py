@@ -11,7 +11,9 @@ vision problem — the speed/scale trade-off behind
   chunked    bounded peak memory, wall clock ~ S/chunk_size sequential
              steps — the only backend that runs when S outgrows the device.
 
-Emits ``exec_<backend>_S<cohort>`` rows (us per round).
+Emits ``exec_<backend>_S<cohort>`` rows (us per round) and returns them in
+the structured ``BENCH_executor.json`` row schema
+(``{"name", "us_per_call", "derived": {...}}`` — see ``repro.obs.bench``).
 """
 from __future__ import annotations
 
@@ -50,7 +52,7 @@ def run(quick: bool = True):
     # materialize once and drop the eval fn: only the round is timed
     params, loss_fn, batch_fn, _ = materialize(
         scenario, seed=0, n_clients=n_clients).problem()
-    results = {}
+    results, rows = {}, []
     for backend, kw in BACKEND_CFGS.items():
         for s in cohorts:
             fed = FedConfig(algorithm="fedpac_soap", n_clients=n_clients,
@@ -60,15 +62,20 @@ def run(quick: bool = True):
                                    loss_fn=loss_fn, client_batch_fn=batch_fn,
                                    fed=fed)
             us = _time_round(exp)
-            results[(backend, s)] = (us, exp.history[-1]["loss"])
-            emit(f"exec_{backend}_S{s}", us,
-                 f"loss={exp.history[-1]['loss']:.4f}")
+            loss = float(exp.history[-1]["loss"])
+            results[(backend, s)] = (us, loss)
+            emit(f"exec_{backend}_S{s}", us, f"loss={loss:.4f}")
+            rows.append({"name": f"exec_{backend}_S{s}", "us_per_call": us,
+                         "derived": {"backend": backend, "cohort": s,
+                                     "loss": loss}})
     # cross-backend agreement on the final loss (same seed, same cohorts)
     for s in cohorts:
         losses = [results[(b, s)][1] for b in BACKEND_CFGS]
-        emit(f"exec_agree_S{s}", 0.0,
-             f"max_dev={max(losses) - min(losses):.2e}")
-    return results
+        dev = max(losses) - min(losses)
+        emit(f"exec_agree_S{s}", 0.0, f"max_dev={dev:.2e}")
+        rows.append({"name": f"exec_agree_S{s}", "us_per_call": 0.0,
+                     "derived": {"cohort": s, "max_dev": dev}})
+    return rows
 
 
 if __name__ == "__main__":

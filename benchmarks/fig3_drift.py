@@ -3,6 +3,11 @@ FedPAC_SOAP across rounds, plus rounds-to-accuracy-threshold.
 
 Claims: (i) FedPAC reduces *normalized* drift ||Theta_i - mean|| / ||mean||;
 (ii) lower drift correlates with reaching the accuracy threshold sooner.
+
+The drift/beta trajectories are read from the observability telemetry
+stream (a ``repro.obs.MemorySink`` attached to the run) — the jit-pure
+diagnostics the round itself computed — not recomputed from the metrics
+history.
 """
 from __future__ import annotations
 
@@ -12,21 +17,26 @@ from benchmarks.common import run_algorithm, emit
 
 
 def run(quick: bool = True):
+    from repro.obs import MemorySink
     rounds = 30 if quick else 60
     out = {}
     for algo in ["local_soap", "fedpac_soap"]:
+        sink = MemorySink()
         exp, hist, wall = run_algorithm(algo, scenario="cifar_like_cnn",
                                         scenario_seed=1, rounds=rounds,
-                                        local_steps=5)
+                                        local_steps=5, trace_sink=sink)
+        tele = [e["telemetry"] for e in sink.rounds()]
         accs = [h["test_acc"] for h in hist]
-        drifts = [h["drift"] for h in hist]
+        drifts = [t["drift"] for t in tele]
         thresh = 0.30
         reach = next((i + 1 for i, a in enumerate(accs) if a >= thresh),
                      None)
         out[algo] = dict(acc=accs[-1], drift_final=drifts[-1],
-                         drift_mean=float(np.mean(drifts)), reach=reach)
+                         drift_mean=float(np.mean(drifts)), reach=reach,
+                         beta_final=tele[-1]["beta_next"])
         emit(f"fig3_{algo}", wall / rounds * 1e6,
              f"acc={accs[-1]:.4f};mean_drift={np.mean(drifts):.3e};"
+             f"beta_final={tele[-1]['beta_next']:.3f};"
              f"rounds_to_{thresh}={reach}")
     emit("fig3_claim_drift_accel", 0.0,
          f"fedpac_acc={out['fedpac_soap']['acc']:.4f};"

@@ -3,13 +3,22 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Default mode is sized for a
 single-CPU container; pass --full for paper-scale rounds.
 
+Benchmarks that return structured rows (exec_scaling, transport) also
+publish ``BENCH_executor.json`` / ``BENCH_transport.json`` under
+``--bench-dir`` — the stable perf-trajectory documents (``repro.obs.bench``
+schema) CI validates and archives.
+
   PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+# (job name, BENCH file stem) for jobs whose run() returns structured rows
+BENCH_JOBS = {"exec_scaling": "executor", "transport": "transport"}
 
 
 def main(argv=None):
@@ -20,6 +29,9 @@ def main(argv=None):
                     help="comma-separated subset: table1,table1_vit,fig3,"
                          "table3,table4,table5,table6,async_drift,"
                          "exec_scaling,transport,scenario_matrix")
+    ap.add_argument("--bench-dir", default=".",
+                    help="directory for the BENCH_*.json perf-trajectory "
+                         "documents (exec_scaling/transport jobs)")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -51,7 +63,14 @@ def main(argv=None):
         if only and name not in only:
             continue
         try:
-            fn()
+            result = fn()
+            if name in BENCH_JOBS and result:
+                from repro.obs import write_bench
+                path = os.path.join(args.bench_dir,
+                                    f"BENCH_{BENCH_JOBS[name]}.json")
+                write_bench(path, BENCH_JOBS[name], result,
+                            config={"quick": quick})
+                emit(f"{name}_bench_written", 0.0, path)
         except Exception as e:  # noqa: BLE001
             failures += 1
             emit(f"{name}_ERROR", 0.0, f"{type(e).__name__}:{str(e)[:120]}")

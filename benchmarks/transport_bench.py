@@ -7,6 +7,9 @@ Every byte count is measured from the encoded wire messages
     while keeping most of FedPAC's accuracy;
   - a lossy *delta* codec with error feedback reaches lower test loss
     than the same codec without it (the residual is delayed, not lost).
+
+Returns the structured ``BENCH_transport.json`` row list
+(``{"name", "us_per_call", "derived": {...}}`` — see ``repro.obs.bench``).
 """
 from __future__ import annotations
 
@@ -26,6 +29,7 @@ def run(quick: bool = True):
         sweep = [("dense", None), ("lowrank_svd", 4), ("qblock", None),
                  ("lowrank_svd+qblock", 4)]
     base_comm = None
+    rows = []
     for codec, rank in sweep:
         exp, hist, wall = run_algorithm(
             "fedpac_soap", scenario=SCENARIO, scenario_seed=7,
@@ -34,9 +38,16 @@ def run(quick: bool = True):
         comm = exp.comm_bytes_per_round()
         base_comm = base_comm or comm
         tag = f"{codec}_r{rank}" if rank else codec
-        emit(f"transport_theta_{tag}", wall / rounds * 1e6,
+        us = wall / rounds * 1e6
+        emit(f"transport_theta_{tag}", us,
              f"loss={hist[-1]['test_loss']:.4f};acc={hist[-1]['test_acc']:.4f};"
              f"comm_KB={comm/1e3:.1f};x_dense={comm/base_comm:.3f}")
+        rows.append({"name": f"transport_theta_{tag}", "us_per_call": us,
+                     "derived": {"codec": codec, "rank": rank,
+                                 "loss": float(hist[-1]["test_loss"]),
+                                 "acc": float(hist[-1]["test_acc"]),
+                                 "comm_bytes": int(comm),
+                                 "x_dense": comm / base_comm}})
 
     # --- error-feedback claim (lossy delta codec) ------------------------
     # rank-1 truncation of the deltas is a strongly biased compressor:
@@ -52,10 +63,21 @@ def run(quick: bool = True):
         emit(f"transport_delta_lowrank1_ef{int(ef)}", 0.0,
              f"loss={results[ef]:.4f};comm_KB="
              f"{exp.comm_bytes_per_round()/1e3:.1f}")
+        rows.append({"name": f"transport_delta_lowrank1_ef{int(ef)}",
+                     "us_per_call": 0.0,
+                     "derived": {"error_feedback": ef,
+                                 "loss": float(results[ef]),
+                                 "comm_bytes":
+                                     int(exp.comm_bytes_per_round())}})
     emit("transport_claim_ef_helps", 0.0,
          f"ef_loss={results[True]:.4f};noef_loss={results[False]:.4f};"
          f"ef_better={results[True] < results[False]}")
-    return results
+    rows.append({"name": "transport_claim_ef_helps", "us_per_call": 0.0,
+                 "derived": {"ef_loss": float(results[True]),
+                             "noef_loss": float(results[False]),
+                             "ef_better":
+                                 bool(results[True] < results[False])}})
+    return rows
 
 
 if __name__ == "__main__":

@@ -13,6 +13,9 @@ entry (``repro.scenarios``); no hand-rolled wiring.
   PYTHONPATH=src python examples/quickstart.py
 
 QUICKSTART_ROUNDS / QUICKSTART_SAMPLES shrink the run (CI smoke job).
+QUICKSTART_TRACE=path.jsonl writes the structured observability trace
+(phase spans + per-round telemetry: drift, beta, staleness histogram,
+wire bytes — see ``repro.obs``).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -23,6 +26,7 @@ from repro.api import build_experiment, materialize, resolve_scenario
 
 ROUNDS = int(os.environ.get("QUICKSTART_ROUNDS", "15"))
 N = int(os.environ.get("QUICKSTART_SAMPLES", "3000"))
+TRACE = os.environ.get("QUICKSTART_TRACE")
 
 # --- the task: 10 clients, Dirichlet(0.1) label skew (strongly non-IID) ---
 # materialized once: all three algorithms share the data, partition, params
@@ -35,6 +39,9 @@ scenario = materialize(
 for algo in ["local_soap", "fedpac_soap", "fedpac_soap_light"]:
     exp = build_experiment(algo, scenario=scenario, participation=0.5,
                            rounds=ROUNDS, local_steps=5, beta=0.5)
+    if TRACE:
+        from repro.obs import JsonlSink, attach
+        attach(exp, JsonlSink(TRACE, append=True))
     hist = exp.run()
     print(f"{algo:14s} acc={hist[-1]['test_acc']:.3f} "
           f"loss={hist[-1]['loss']:.3f} drift={hist[-1]['drift']:.2e} "

@@ -106,7 +106,12 @@ def load_pytree(template, path: str):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def save_server_state(server: ServerState, directory: str, step: int):
+def save_server_state(server: ServerState, directory: str, step: int,
+                      telemetry: Optional[dict] = None):
+    """``telemetry`` is the tracer's persistent identity
+    (``repro.obs.Tracer.state()``: run_id + cumulative round/span/seq
+    counters) so a restored run appends to the same JSONL trace instead of
+    restarting its numbering."""
     d = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
     save_pytree(server.params, os.path.join(d, "params.npz"))
@@ -117,7 +122,18 @@ def save_server_state(server: ServerState, directory: str, step: int):
         json.dump({"round": server.round,
                    "theta_version": server.theta_version,
                    "has_theta": server.theta is not None,
-                   "geom": _geom_to_meta(server.geom)}, f)
+                   "geom": _geom_to_meta(server.geom),
+                   "telemetry": telemetry}, f)
+
+
+def load_meta(directory: str, step: Optional[int] = None) -> dict:
+    """The raw checkpoint meta dict (round, theta_version, geom, telemetry
+    trace identity).  ``meta.get("telemetry")`` feeds
+    ``repro.obs.Tracer.from_state``."""
+    step = latest_step(directory) if step is None else step
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        return json.load(f)
 
 
 def load_server_state(template: ServerState, directory: str,
@@ -158,8 +174,9 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
 
-    def save(self, server: ServerState):
-        save_server_state(server, self.directory, server.round)
+    def save(self, server: ServerState, telemetry: Optional[dict] = None):
+        save_server_state(server, self.directory, server.round,
+                          telemetry=telemetry)
         steps = sorted(int(n.split("_")[1]) for n in os.listdir(self.directory)
                        if n.startswith("step_"))
         for s in steps[: -self.keep]:
@@ -170,3 +187,7 @@ class CheckpointManager:
 
     def restore(self, template: ServerState) -> ServerState:
         return load_server_state(template, self.directory)
+
+    def restore_meta(self) -> dict:
+        """Latest checkpoint's meta (incl. the ``telemetry`` trace state)."""
+        return load_meta(self.directory)

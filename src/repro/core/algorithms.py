@@ -319,6 +319,7 @@ def build_round_fn(
     executor: Optional[ExecutorConfig] = None,
     n_clients: Optional[int] = None,
     jit: bool = True,
+    telemetry: bool = False,
 ):
     """The one round implementation, for every registered algorithm.
 
@@ -334,6 +335,11 @@ def build_round_fn(
     messages before aggregation and reports the measured ``upload_bytes``.
     ``compress_fn`` is the legacy stacked Theta round-trip (exclusive with
     ``transport``); None for both is the plain dense path.
+
+    ``telemetry=True`` additionally computes the jit-pure ``Telemetry``
+    diagnostics (``repro.obs.telemetry``) inside the round and returns the
+    pytree under ``metrics["telemetry"]`` — the same ``collect`` the async
+    flush runs, so sync and zero-staleness-async telemetry agree bitwise.
     """
     if transport is not None and compress_fn is not None:
         raise ValueError("pass either transport or the legacy compress_fn, "
@@ -422,6 +428,12 @@ def build_round_fn(
         new_ctrl = update_controller(ctrl, agg["norm_drift"],
                                      agg["freshness"])
         metrics = dict(agg, loss=jnp.mean(losses), beta=ctrl.beta)
+        if telemetry:
+            from repro.obs import telemetry as obs_telemetry
+            metrics["telemetry"] = obs_telemetry.collect(
+                deltas=deltas, thetas=thetas, weights=weights,
+                g_global=g_global, ctrl=ctrl, new_ctrl=new_ctrl,
+                agg_metrics=agg)
         return new_params, new_theta, new_g, new_ctrl, new_cstate, metrics
 
     if jit:

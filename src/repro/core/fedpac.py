@@ -46,6 +46,7 @@ def make_round_fn(
     drift_ema: float = 1.0,           # EMA coeff for beta="auto" (1 = raw)
     executor: Optional[ExecutorConfig] = None,
     jit: bool = True,
+    telemetry: bool = False,   # metrics["telemetry"] (repro.obs) when True
 ):
     """Returns round_fn(server_state, batches, rng) -> (server_state, metrics).
 
@@ -62,7 +63,8 @@ def make_round_fn(
         spec, loss_fn, opt, lr=lr, local_steps=local_steps, beta=beta,
         hessian_freq=hessian_freq, server_lr=server_lr,
         compress_fn=compress_fn, transport=transport, beta_max=beta_max,
-        drift_ema=drift_ema, executor=executor, jit=jit)
+        drift_ema=drift_ema, executor=executor, jit=jit,
+        telemetry=telemetry)
 
     def round_fn(server: ServerState, batches, rng):
         s = jax.tree.leaves(batches)[0].shape[0]

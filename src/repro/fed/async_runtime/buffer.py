@@ -71,10 +71,11 @@ class AsyncConfig:
 def make_async_aggregate_fn(*, lr: float, local_steps: int,
                             server_lr: float = 1.0, align: bool = True,
                             mixing=None, transport=None, wire_cell=None,
-                            jit: bool = True):
-    """Returns flush(params, theta, g_global, ctrl, deltas, thetas, weights)
-    -> (params', theta', g_global', ctrl', metrics); stacked (B, ...)
-    buffer.  One engine aggregate + one controller step, jitted together.
+                            jit: bool = True, telemetry: bool = False):
+    """Returns flush(params, theta, g_global, ctrl, deltas, thetas, weights,
+    staleness=None) -> (params', theta', g_global', ctrl', metrics);
+    stacked (B, ...) buffer.  One engine aggregate + one controller step,
+    jitted together.
 
     With ``transport`` (core.transport.Transport) the buffer entries are
     stacked *wire messages* — deltas always, thetas too when ``align`` —
@@ -87,11 +88,18 @@ def make_async_aggregate_fn(*, lr: float, local_steps: int,
     ``mixing`` is an optional AlgorithmSpec hook ``(deltas, thetas) ->
     (B,)`` (e.g. preconditioned mixing); its weights multiply the
     staleness-decay weights, so a stale *and* sharp-curvature client is
-    damped by both policies."""
+    damped by both policies.
+
+    ``telemetry=True`` runs the jit-pure ``repro.obs.telemetry.collect``
+    inside the flush (the identical call the sync round makes, so
+    zero-staleness telemetry matches the sync round's bitwise) and returns
+    it under ``metrics["telemetry"]``; ``staleness`` is the buffer's (B,)
+    integer staleness vector (None means all-fresh)."""
     cfg = AggregationConfig(lr=lr, local_steps=local_steps,
                             server_lr=server_lr, align=align)
 
-    def flush(params, theta, g_global, ctrl, deltas, thetas, weights):
+    def flush(params, theta, g_global, ctrl, deltas, thetas, weights,
+              staleness=None):
         if transport is not None:
             b = jax.tree.leaves(weights)[0].shape[0]
             up_bytes = wire_bytes(deltas)
@@ -111,6 +119,12 @@ def make_async_aggregate_fn(*, lr: float, local_steps: int,
                                      agg["freshness"])
         metrics = dict(agg, loss=jnp.zeros(()),  # loss filled by the driver
                        beta=ctrl.beta)
+        if telemetry:
+            from repro.obs import telemetry as obs_telemetry
+            metrics["telemetry"] = obs_telemetry.collect(
+                deltas=deltas, thetas=thetas, weights=weights,
+                g_global=g_global, ctrl=ctrl, new_ctrl=new_ctrl,
+                agg_metrics=agg, staleness=staleness)
         return new_params, new_theta, new_g, new_ctrl, metrics
 
     return jax.jit(flush) if jit else flush

@@ -101,7 +101,8 @@ class AsyncFederatedExperiment(FedExperiment):
         self._flush_fn = make_async_aggregate_fn(
             lr=self.lr, local_steps=fed.local_steps, server_lr=fed.server_lr,
             align=self.align, mixing=self.spec.mixing,
-            transport=self.transport, wire_cell=self._wire_cell)
+            transport=self.transport, wire_cell=self._wire_cell,
+            telemetry=True)
         # EF residuals use the same ClientStateSpec protocol as the sync
         # runtime, driven per dispatch (a client's own state is not
         # lock-step: it reads/writes it when *it* trains).  The scatter is
@@ -147,16 +148,22 @@ class AsyncFederatedExperiment(FedExperiment):
         The payload holds *wire messages* — delta (error-compensated for
         lossy codecs) and, for aligned algorithms, Theta — exactly what
         the client would put on the network."""
-        batches = stage_client_batches(self.client_batch_fn, cid,
-                                       self.fed.local_steps, self.rng)
-        key = jax.random.key(int(self.rng.integers(0, 2**31)))
+        t = self.tracer
+        with t.span("staging", client_id=cid, sim_time=self.scheduler.now):
+            batches = stage_client_batches(self.client_batch_fn, cid,
+                                           self.fed.local_steps, self.rng)
+            key = jax.random.key(int(self.rng.integers(0, 2**31)))
         theta = self.server.theta if self.server.theta is not None \
             else self._theta0
         residual = EF_STATE.client_view(self._ef_state, cid) if self._ef \
             else None
-        dmsg, tmsg, new_residual, loss = self._local_fn(
-            self.server.params, theta, self.server.g_global, batches, key,
-            self.server.geom.beta, residual)
+        with t.span("local_update", client_id=cid,
+                    sim_time=self.scheduler.now):
+            dmsg, tmsg, new_residual, loss = self._local_fn(
+                self.server.params, theta, self.server.g_global, batches, key,
+                self.server.geom.beta, residual)
+            if t.enabled:
+                jax.block_until_ready(loss)
         if self._ef:
             self._ef_state = self._ef_scatter(
                 self._ef_state, jnp.asarray(cid), new_residual)
@@ -166,8 +173,9 @@ class AsyncFederatedExperiment(FedExperiment):
 
     def run_round(self):
         """Collect ``buffer_size`` usable client reports, then flush."""
-        acf, sched = self.acfg, self.scheduler
+        acf, sched, t = self.acfg, self.scheduler, self.tracer
         version = self.server.round
+        rnum = version + 1             # the round this flush produces
         sched.fill(version, self._client_payload)
         buffered, stale, weights = [], [], []
         dropped = discarded = 0
@@ -182,11 +190,17 @@ class AsyncFederatedExperiment(FedExperiment):
             # replacement trains from the *current* server state
             sched.fill(version, self._client_payload)
             if ev.dropped:
+                # a dispatch that never reports back is an explicit trace
+                # event, not a silent counter bump
                 dropped += 1
+                t.client_dropped(ev.client_id, reason="dropout",
+                                 version=ev.version, sim_time=ev.time)
                 continue
             s = version - ev.version
             if acf.max_staleness is not None and s > acf.max_staleness:
                 discarded += 1
+                t.client_dropped(ev.client_id, reason="max_staleness",
+                                 version=ev.version, sim_time=ev.time)
                 if self._ef:
                     # the residual was committed at dispatch assuming this
                     # upload would be aggregated — restore the discarded
@@ -200,23 +214,29 @@ class AsyncFederatedExperiment(FedExperiment):
             stale.append(s)
             weights.append(self._weight_fn(s))
 
-        # stack the buffered wire messages client-axis-first; the jitted
-        # flush decodes them right before aggregation
-        deltas = jax.tree.map(lambda *xs: jnp.stack(xs),
-                              *[ev.payload["delta"] for ev in buffered])
-        thetas = jax.tree.map(lambda *xs: jnp.stack(xs),
-                              *[ev.payload["theta"] for ev in buffered])
-        w = jnp.asarray(weights, jnp.float32)
-        theta_ref = self.server.theta if self.server.theta is not None \
-            else self._theta0
-        p, th, g, ctrl, metrics = self._flush_fn(
-            self.server.params, theta_ref, self.server.g_global,
-            self.server.geom, deltas, thetas, w)
+        with t.span("flush", round=rnum, sim_time=sched.now):
+            # stack the buffered wire messages client-axis-first; the jitted
+            # flush decodes them right before aggregation
+            deltas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[ev.payload["delta"] for ev in buffered])
+            thetas = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[ev.payload["theta"] for ev in buffered])
+            w = jnp.asarray(weights, jnp.float32)
+            theta_ref = self.server.theta if self.server.theta is not None \
+                else self._theta0
+            p, th, g, ctrl, metrics = self._flush_fn(
+                self.server.params, theta_ref, self.server.g_global,
+                self.server.geom, deltas, thetas, w,
+                jnp.asarray(stale, jnp.int32))
+            if t.enabled:
+                jax.block_until_ready(metrics)
         self.server = advance_server(self.server, p, th if self.align else
                                      None, g, geom=ctrl, aligned=self.align)
 
         self.total_dropped += dropped
         self.total_discarded += discarded
+        tele = metrics.pop("telemetry", None)
+        self.last_telemetry = tele
         rec = {k: float(v) for k, v in metrics.items()}
         if "per_client" in self._wire_cell:
             # trace-time capture: exact host int, not a lossy f32 scalar
@@ -232,8 +252,14 @@ class AsyncFederatedExperiment(FedExperiment):
         })
         rec["round"] = self.server.round
         if self.eval_fn is not None:
-            rec.update({k: float(v) for k, v in
-                        self.eval_fn(self.server.params).items()})
+            with t.span("eval", round=rnum, sim_time=sched.now):
+                rec.update({k: float(v) for k, v in
+                            self.eval_fn(self.server.params).items()})
+        if t.enabled:
+            from repro.obs.telemetry import telemetry_dict
+            t.round_event(rec["round"], rec, sim_time=float(sched.now),
+                          telemetry=telemetry_dict(tele) if tele is not None
+                          else None)
         self.history.append(rec)
         return rec
 

@@ -10,7 +10,12 @@ a communication round in the sync runtime, a buffer flush in the async one.
 The base class owns the config/rounds contract: subclasses call
 ``super().__init__(fed)`` with any config exposing an integer ``rounds``
 attribute (``FedConfig`` in-tree), which also initializes ``history``.
-Round logging goes through the single overridable ``log_round`` hook.
+Round logging goes through the single overridable ``log_round`` hook,
+which routes through the observability sink protocol (``repro.obs``):
+``self.sink`` receives one ``round`` event per logged round, defaulting to
+``StdoutRoundSink`` — byte-identical to the legacy print formatting.
+``self.tracer`` is the round-trace span recorder (disabled until sinks are
+attached via ``repro.obs.attach``).
 
 ``make_experiment`` picks the runtime from ``FedConfig.runtime`` — it is
 the legacy positional constructor; prefer ``repro.api.build_experiment``.
@@ -19,6 +24,10 @@ from __future__ import annotations
 
 import abc
 from typing import Optional
+
+from repro.obs.sinks import StdoutRoundSink
+from repro.obs.sinks import format_metric as _format_metric
+from repro.obs.trace import Tracer
 
 
 class FedExperiment(abc.ABC):
@@ -30,6 +39,12 @@ class FedExperiment(abc.ABC):
       scenario — the materialized ``repro.scenarios.Scenario`` bundle when
                  the experiment was built from a declarative scenario
                  (``build_experiment(..., scenario=...)``); None otherwise
+      sink     — ``repro.obs.Sink`` receiving ``log_round`` round events
+                 (default: legacy-bitwise stdout formatting)
+      tracer   — ``repro.obs.Tracer`` for span/round/drop trace events;
+                 disabled (no sinks) unless ``repro.obs.attach``-ed
+      last_telemetry — the most recent jit-pure ``Telemetry`` pytree
+                 (None before the first round)
     """
 
     fed: "FedConfig"     # noqa: F821 — any config with an int .rounds
@@ -46,6 +61,9 @@ class FedExperiment(abc.ABC):
                 "config object")
         self.fed = fed
         self.history = []
+        self.sink = StdoutRoundSink()
+        self.tracer = Tracer()       # disabled until obs.attach()
+        self.last_telemetry = None
 
     @abc.abstractmethod
     def run_round(self) -> dict:
@@ -55,18 +73,17 @@ class FedExperiment(abc.ABC):
     def comm_bytes_per_round(self) -> int:
         """Per-client upload bytes for one round (Table 6 accounting)."""
 
-    @staticmethod
-    def format_metric(v):
-        """4-decimal rounding for floats; everything else (ints, None,
-        strings, arrays from custom eval fns) passes through untouched."""
-        try:
-            return round(v, 4)
-        except TypeError:
-            return v
+    # 4-decimal rounding for floats; everything else (ints, None, strings,
+    # arrays from custom eval fns) passes through untouched.
+    format_metric = staticmethod(_format_metric)
 
     def log_round(self, rec: dict, r: int) -> None:
-        """Per-round logging hook; override to route metrics elsewhere."""
-        print({k: self.format_metric(v) for k, v in rec.items()})
+        """Per-round logging hook; routes through ``self.sink`` (override
+        either this hook or the sink to redirect metrics).  The emitted
+        event mirrors the tracer's ``round`` events minus the trace-stream
+        sequencing (logging and tracing are independent channels)."""
+        self.sink.emit({"event": "round", "run_id": self.tracer.run_id,
+                        "round": r, "metrics": rec})
 
     def run(self, rounds: Optional[int] = None, log_every: int = 0):
         """Run ``rounds`` model updates (default: ``self.fed.rounds``)."""

@@ -175,7 +175,8 @@ class FederatedExperiment(FedExperiment):
             local_steps=fed.local_steps, beta=beta,
             hessian_freq=fed.hessian_freq, server_lr=fed.server_lr,
             transport=self.transport,
-            executor=fed.executor_config(), n_clients=fed.n_clients)
+            executor=fed.executor_config(), n_clients=fed.n_clients,
+            telemetry=True)
         geom = make_controller(beta, correct=self.spec.correct,
                                beta_max=BETA_MAX_AUTO)
         self.server = init_server(params, self.opt, geom=geom)
@@ -196,17 +197,33 @@ class FederatedExperiment(FedExperiment):
     # ------------------------------------------------------------ loop
 
     def run_round(self):
-        cohort = self._sample_cohort()
-        batches = self._stage_batches(cohort)
-        key = jax.random.key(int(self.rng.integers(0, 2**31)))
-        self.server, self.client_state, metrics = self.round_fn(
-            self.server, self.client_state, jnp.asarray(cohort), batches,
-            key)
+        t = self.tracer
+        rnum = self.server.round + 1   # the round this update produces
+        with t.span("staging", round=rnum):
+            cohort = self._sample_cohort()
+            batches = self._stage_batches(cohort)
+            key = jax.random.key(int(self.rng.integers(0, 2**31)))
+        # one jitted call fuses local update + wire encode + aggregation;
+        # the span blocks on the result only when someone is tracing
+        with t.span("update", round=rnum):
+            self.server, self.client_state, metrics = self.round_fn(
+                self.server, self.client_state, jnp.asarray(cohort), batches,
+                key)
+            if t.enabled:
+                jax.block_until_ready(metrics)
+        tele = metrics.pop("telemetry", None)
+        self.last_telemetry = tele
         rec = {k: float(v) for k, v in metrics.items()}
         rec["round"] = self.server.round
         if self.eval_fn is not None:
-            rec.update({k: float(v) for k, v in
-                        self.eval_fn(self.server.params).items()})
+            with t.span("eval", round=rnum):
+                rec.update({k: float(v) for k, v in
+                            self.eval_fn(self.server.params).items()})
+        if t.enabled:
+            from repro.obs.telemetry import telemetry_dict
+            t.round_event(rec["round"], rec,
+                          telemetry=telemetry_dict(tele) if tele is not None
+                          else None)
         self.history.append(rec)
         return rec
 

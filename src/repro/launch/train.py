@@ -41,6 +41,9 @@ def main(argv=None):
     ap.add_argument("--out", default=None)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=5)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="append a structured JSONL round trace (spans, "
+                         "metrics, telemetry) to PATH")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_reduced(args.arch)
@@ -83,13 +86,25 @@ def main(argv=None):
     if args.checkpoint_dir:
         from repro.checkpoint import CheckpointManager
         mgr = CheckpointManager(args.checkpoint_dir)
+    if args.trace:
+        from repro.obs import JsonlSink, Tracer
+        sink = JsonlSink(args.trace, append=True)
+        state = None
+        if mgr:
+            # resume the persisted trace identity (same run_id, continued
+            # seq numbering) so restored runs append to the same trace
+            try:
+                state = mgr.restore_meta().get("telemetry")
+            except FileNotFoundError:
+                pass
+        exp.tracer = Tracer.from_state(state, sinks=(sink,))
     hist = []
     for r in range(fed.rounds):
         rec = exp.run_round()
         hist.append(rec)
         exp.log_round(rec, r)
         if mgr and (r + 1) % args.checkpoint_every == 0:
-            mgr.save(exp.server)
+            mgr.save(exp.server, telemetry=exp.tracer.state())
     print(f"final: train_loss={hist[-1]['loss']:.4f} "
           f"eval_loss={hist[-1]['eval_loss']:.4f} "
           f"comm={exp.comm_bytes_per_round()/1e6:.1f}MB/round")

@@ -1,0 +1,135 @@
+"""Kernel profiling hooks: one timing harness over the ref/ops/kernel
+triads (``soap_rotate``, ``qblock``, ``ns_ortho``, ``sophia_update``).
+
+Each kernel package already pairs a pure-jnp oracle (``ref``) with a
+Pallas path (``ops`` dispatching to ``kernel``); this harness times both
+implementations on the same inputs and emits records with analytic
+FLOP/byte envelopes, so ``benchmarks/roofline.py`` can place the measured
+throughput against the machine's roofline:
+
+  {"kind": "kernel", "kernel": "soap_rotate", "impl": "ref"|"pallas",
+   "shape": [m, n], "us_per_call": ..., "flops": ..., "bytes": ...,
+   "gflops_s": ..., "gbps": ...}
+
+On non-TPU hosts the Pallas path runs in interpret mode — its timings
+measure the interpreter, not the kernel, and the records say so
+(``interpret: true``).  The envelopes are coarse by design (matmul
+2mnk FLOPs, one read+write per array): good enough to rank bound-ness,
+not a substitute for a hardware profiler.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ns_ortho.ops import newton_schulz
+from repro.kernels.qblock.ops import quantize
+from repro.kernels.soap_rotate.ops import soap_rotated_update
+from repro.kernels.sophia_update.ops import sophia_update
+
+KERNELS = ("soap_rotate", "qblock", "ns_ortho", "sophia_update")
+NS_STEPS = 5
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Microseconds per call, compile excluded (device-synchronized)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    del out
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _mk(shape, key, n=1):
+    ks = jax.random.split(jax.random.key(key), n)
+    arrs = [jax.random.normal(k, shape, jnp.float32) for k in ks]
+    return arrs[0] if n == 1 else arrs
+
+
+def _cases(shape, block: int, interpret: bool):
+    """(kernel, impl_name, jitted_fn, args, flops, bytes) per triad."""
+    m, n = shape
+    size = m * n
+    f32 = 4
+    g = _mk(shape, 0)
+    out = []
+
+    # soap_rotate: 4 (n x n)-ish matmuls + fused rotated-Adam moments
+    ql, qr = _mk((m, m), 1), _mk((n, n), 2)
+    mom, v = _mk(shape, 3, 2)
+    flops = 2 * (m * m * n) * 2 + 2 * (m * n * n) * 2 + 12 * size
+    byts = f32 * size * 8   # g, 2 rotations, m, v in/out, d
+    for impl, kw in (("ref", dict(use_pallas=False)),
+                     ("pallas", dict(use_pallas=True, interpret=interpret,
+                                     block=block))):
+        fn = jax.jit(functools.partial(soap_rotated_update, b1=0.95, b2=0.95,
+                                       **kw))
+        out.append(("soap_rotate", impl, fn, (g, ql, qr, mom, v),
+                    flops, byts))
+
+    # qblock: one memory-bound pass (read f32, write int8 + scales)
+    qflops = 4 * size
+    qbytes = f32 * size + size + f32 * (size // block + 1)
+    for impl, kw in (("ref", dict(use_pallas=False)),
+                     ("pallas", dict(use_pallas=True, interpret=interpret))):
+        fn = jax.jit(functools.partial(quantize, block=block, **kw))
+        out.append(("qblock", impl, fn, (g,), qflops, qbytes))
+
+    # ns_ortho: NS_STEPS quintic iterations, 3 matmuls each
+    nflops = NS_STEPS * (2 * m * m * n * 2 + 2 * m * m * m)
+    nbytes = f32 * size * 2 * NS_STEPS * 3
+    for impl, kw in (("ref", dict(use_pallas=False)),
+                     ("pallas", dict(use_pallas=True, interpret=interpret))):
+        fn = jax.jit(functools.partial(newton_schulz, steps=NS_STEPS, **kw))
+        out.append(("ns_ortho", impl, fn, (g,), nflops, nbytes))
+
+    # sophia_update: fused momentum/clip/precondition elementwise pass
+    h = _mk(shape, 4)
+    sflops = 8 * size
+    sbytes = f32 * size * 5   # g, m, h in; update, m out
+    for impl, kw in (("ref", dict(use_pallas=False)),
+                     ("pallas", dict(use_pallas=True, interpret=interpret))):
+        fn = jax.jit(functools.partial(sophia_update, **kw))
+        out.append(("sophia_update", impl, fn, (g, mom, h), sflops, sbytes))
+    return out
+
+
+def profile_kernels(shapes=((256, 256),), *, block: int = 128,
+                    interpret=None, iters: int = 5,
+                    kernels=None) -> list:
+    """Time every triad at every shape; returns a list of records.
+
+    ``interpret=None`` picks real Pallas kernels on TPU and the
+    interpreter elsewhere (the same auto rule the transport uses).
+    ``kernels`` restricts to a subset of ``KERNELS``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    want = set(kernels) if kernels is not None else set(KERNELS)
+    unknown = want - set(KERNELS)
+    if unknown:
+        raise ValueError(f"unknown kernels {sorted(unknown)} "
+                         f"(want a subset of {KERNELS})")
+    records = []
+    for shape in shapes:
+        for kernel, impl, fn, args, flops, byts in _cases(
+                tuple(shape), block, interpret):
+            if kernel not in want:
+                continue
+            us = time_fn(fn, *args, iters=iters)
+            sec = us / 1e6
+            records.append({
+                "kind": "kernel", "kernel": kernel, "impl": impl,
+                "shape": list(shape), "block": block,
+                "interpret": bool(interpret and impl == "pallas"),
+                "backend": jax.default_backend(),
+                "us_per_call": us, "flops": flops, "bytes": byts,
+                "gflops_s": flops / sec / 1e9,
+                "gbps": byts / sec / 1e9,
+            })
+    return records

@@ -1,0 +1,130 @@
+"""Jit-pure drift telemetry: the on-device diagnostics of one server update.
+
+``Telemetry`` is a registered pytree of scalar/vector diagnostics computed
+*inside* the jitted round (sync) or flush (async) from exactly the arrays
+the engine aggregates — no host callbacks, no recomputation from history.
+Because both runtimes call the same ``collect`` with the same inputs, the
+telemetry of a zero-staleness async flush is bitwise-identical to the sync
+round's (parity-tested in ``tests/test_obs.py``, the same contract
+``engine.aggregation.aggregate`` carries).
+
+Fields:
+  drift / norm_drift    preconditioner drift (Def. 1), raw and normalized
+  freshness             rho = mean staleness weight (1.0 for sync rounds)
+  beta / beta_next      correction strength used this round / next round
+  drift_ema             the controller's smoothed drift after its update
+  update_corr_cos       cos(aggregated step, -g_G): how aligned the cohort
+                        update is with the correction direction it will be
+                        mixed with — the paper's "corrupted descent
+                        direction" made observable
+  client_geom_dist      (S,) sketched ||Theta_i - mean_j Theta_j||^2 per
+                        client: a JL random projection (the power_sketch
+                        trick with a fixed Omega) so per-client geometry
+                        distances cost O(S * d * r), not O(S * d^2)
+  staleness_hist        (STALENESS_BINS,) int32 histogram of the cohort's
+                        staleness (all mass in bin 0 for a sync round)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.aggregation import weighted_client_mean
+from repro.utils.tree import tree_dot, tree_norm_sq
+
+STALENESS_BINS = 8       # last bin catches s >= STALENESS_BINS - 1
+SKETCH_RANK = 8
+_SKETCH_KEY = 0xD81F7    # fixed: every round projects through the same Omega
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("drift", "norm_drift", "freshness", "beta", "beta_next",
+                 "drift_ema", "update_corr_cos", "client_geom_dist",
+                 "staleness_hist"),
+    meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    drift: jax.Array
+    norm_drift: jax.Array
+    freshness: jax.Array
+    beta: jax.Array
+    beta_next: jax.Array
+    drift_ema: jax.Array
+    update_corr_cos: jax.Array
+    client_geom_dist: jax.Array    # (S,)
+    staleness_hist: jax.Array      # (STALENESS_BINS,) int32
+
+
+def staleness_histogram(staleness, bins: int = STALENESS_BINS):
+    """Fixed-width int32 histogram of per-client staleness (jit-pure)."""
+    s = jnp.clip(staleness.astype(jnp.int32), 0, bins - 1)
+    return jnp.sum(jax.nn.one_hot(s, bins, dtype=jnp.int32), axis=0)
+
+
+def client_geom_dist(thetas, s: int, rank: int = SKETCH_RANK):
+    """(S,) sketched squared distance of each client's geometry to the
+    cohort mean.  Leaves wider than ``rank`` are projected through a fixed
+    Gaussian Omega scaled by 1/sqrt(rank), so the squared distance is an
+    unbiased JL estimate of the dense one; narrow leaves are exact.
+    thetas=None (first-order algorithms) reports zeros."""
+    total = jnp.zeros((s,), jnp.float32)
+    if thetas is None:
+        return total
+    for i, leaf in enumerate(jax.tree.leaves(thetas)):
+        x = leaf.astype(jnp.float32).reshape(leaf.shape[0], -1)
+        if x.shape[1] > rank:
+            omega = jax.random.normal(
+                jax.random.key(_SKETCH_KEY + i), (x.shape[1], rank),
+                jnp.float32) / jnp.sqrt(jnp.float32(rank))
+            x = x @ omega
+        c = x - jnp.mean(x, axis=0, keepdims=True)
+        total = total + jnp.sum(c * c, axis=-1)
+    return total
+
+
+def collect(*, deltas, thetas, weights, g_global, ctrl, new_ctrl,
+            agg_metrics, staleness=None) -> Telemetry:
+    """Assemble one round's ``Telemetry`` from the engine's own arrays.
+
+    Call *after* ``engine.aggregate`` + ``update_controller`` with the same
+    decoded ``deltas``/``thetas`` and final ``weights`` the aggregate saw,
+    the pre-round controller ``ctrl`` and post-update ``new_ctrl``, and the
+    aggregate's metrics dict.  ``staleness`` is the (S,) integer staleness
+    vector; None means a synchronous cohort (all zeros).
+    """
+    w = weights.astype(jnp.float32)
+    s = w.shape[0]
+    step = weighted_client_mean(deltas, w)
+    cos = (-tree_dot(step, g_global)
+           / (jnp.sqrt(tree_norm_sq(step) * tree_norm_sq(g_global)) + 1e-12))
+    if staleness is None:
+        staleness = jnp.zeros((s,), jnp.int32)
+    return Telemetry(
+        drift=agg_metrics["drift"].astype(jnp.float32),
+        norm_drift=agg_metrics["norm_drift"].astype(jnp.float32),
+        freshness=agg_metrics["freshness"].astype(jnp.float32),
+        beta=ctrl.beta.astype(jnp.float32),
+        beta_next=new_ctrl.beta.astype(jnp.float32),
+        drift_ema=new_ctrl.drift_ema.astype(jnp.float32),
+        update_corr_cos=cos.astype(jnp.float32),
+        client_geom_dist=client_geom_dist(thetas, s),
+        staleness_hist=staleness_histogram(staleness))
+
+
+def telemetry_dict(t: Telemetry) -> dict:
+    """Host-side view for trace events: floats + plain lists."""
+    return {
+        "drift": float(t.drift),
+        "norm_drift": float(t.norm_drift),
+        "freshness": float(t.freshness),
+        "beta": float(t.beta),
+        "beta_next": float(t.beta_next),
+        "drift_ema": float(t.drift_ema),
+        "update_corr_cos": float(t.update_corr_cos),
+        "client_geom_dist": [float(x) for x in t.client_geom_dist],
+        "staleness_hist": [int(x) for x in t.staleness_hist],
+    }
