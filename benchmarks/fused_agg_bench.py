@@ -1,0 +1,115 @@
+"""Fused decode-aggregate flush micro-benchmark.
+
+Times the two server-side reductions of a cohort of encoded uploads —
+
+  decode   jax.vmap(codec.decode) materializes the (B, ...) f32 stack,
+           then one dot_general contraction forms sum_i w_i Delta_i
+  fused    codec.accumulate reduces the wire payloads straight into the
+           weighted sum (kernels/fused_agg); the decoded per-client stack
+           never exists
+
+— across codec x wire_dtype x cohort size, at a fixed synthetic model
+tree.  Alongside wall time the rows record the *analytic peak
+intermediate bytes* of each path: the decode path must hold B dense f32
+trees, the fused path only the wire payloads plus one dense output, so
+the memory ratio is the headline at million-client cohort scale even
+where small-cohort wall times tie.  Each cell also asserts the two paths
+agree (allclose, f32), so the speedup is never measured against a wrong
+answer.
+
+Returns structured rows appended to ``BENCH_transport.json`` by
+``benchmarks/transport_bench.run`` (and printable standalone via
+``python -m benchmarks.run --only fused_agg``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.transport import TransportConfig, resolve_codec
+from repro.core.transport import wire_bytes as wire_bytes_of
+from repro.utils.tree import client_weighted_sum
+
+# one transformer-ish block: two matrices wide enough to quantize/factor
+# plus a narrow passthrough leaf
+SHAPES = {"wq": (256, 256), "wo": (256, 128), "b": (128,)}
+CODECS = ("qblock", "lowrank_svd", "lowrank_svd+qblock")
+WIRE_DTYPES = ("f32", "bf16")
+
+
+def _stacked_tree(b: int, seed: int = 0):
+    keys = jax.random.split(jax.random.key(seed), len(SHAPES))
+    return {name: 0.1 * jax.random.normal(k, (b,) + shape, jnp.float32)
+            for k, (name, shape) in zip(keys, SHAPES.items())}
+
+
+def _dense_bytes() -> int:
+    return sum(4 * int(jnp.prod(jnp.asarray(s))) for s in SHAPES.values())
+
+
+def bench_cell(codec_name: str, wire_dtype: str, cohort: int,
+               iters: int = 5):
+    """One (codec, wire_dtype, cohort) cell -> structured BENCH row."""
+    cfg = TransportConfig(rank=8, block=128, wire_dtype=wire_dtype)
+    codec = resolve_codec(codec_name, cfg)
+    stacked = _stacked_tree(cohort)
+    msgs = jax.jit(jax.vmap(codec.encode))(stacked)
+    w = 0.5 + 0.5 * jax.random.uniform(jax.random.key(1), (cohort,))
+
+    fused = jax.jit(codec.accumulate)
+    decode = jax.jit(lambda m, ww: client_weighted_sum(
+        jax.vmap(codec.decode)(m), ww))
+
+    a = jax.block_until_ready(fused(msgs, w))
+    bb = jax.block_until_ready(decode(msgs, w))
+    maxdiff = max(float(jnp.max(jnp.abs(x - y)))
+                  for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(bb)))
+    if maxdiff > 1e-4:
+        raise AssertionError(
+            f"fused/decode disagree for {codec_name}/{wire_dtype}: "
+            f"maxdiff={maxdiff}")
+
+    us_fused, _ = timeit(fused, msgs, w, iters=iters)
+    us_decode, _ = timeit(decode, msgs, w, iters=iters)
+
+    # peak transient bytes beyond the resident wire messages: the decode
+    # path materializes the full (B, ...) f32 stack; the fused path's
+    # largest intermediate is one dense f32 output tree
+    decoded_stack = cohort * _dense_bytes()
+    fused_peak = _dense_bytes()
+    wire = wire_bytes_of(msgs)
+    name = f"fused_agg_{codec_name.replace('+', '_')}_{wire_dtype}_c{cohort}"
+    emit(name, us_fused,
+         f"x_decode={us_decode / us_fused:.2f};"
+         f"peak_ratio={decoded_stack / fused_peak:.1f};"
+         f"wire_KB={wire / 1e3:.1f};maxdiff={maxdiff:.1e}")
+    return {"name": name, "us_per_call": us_fused,
+            "derived": {"codec": codec_name, "wire_dtype": wire_dtype,
+                        "cohort": cohort, "us_fused": us_fused,
+                        "us_decode": us_decode,
+                        "x_decode": us_decode / us_fused,
+                        "wire_bytes": int(wire),
+                        "decoded_stack_bytes": int(decoded_stack),
+                        "fused_peak_bytes": int(fused_peak),
+                        "peak_bytes_ratio": decoded_stack / fused_peak,
+                        "maxdiff": maxdiff}}
+
+
+def run(quick: bool = True):
+    cohorts = (16, 64) if quick else (16, 64, 256)
+    iters = 3 if quick else 10
+    rows = []
+    for codec_name in CODECS:
+        for wire_dtype in WIRE_DTYPES:
+            if codec_name == "qblock" and wire_dtype == "bf16":
+                continue   # int8 payload + f32 scales: no bf16 wire form
+            for cohort in cohorts:
+                rows.append(bench_cell(codec_name, wire_dtype, cohort,
+                                       iters=iters))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(quick=False)

@@ -7,7 +7,8 @@ Two modes:
                 PYTHONPATH=src python -m benchmarks.roofline \\
                     results/dryrun_baseline.jsonl
   --kernels   *measures* the kernel triads (soap_rotate, qblock, ns_ortho,
-              sophia_update) through the observability profiling hooks
+              sophia_update, fused_agg) through the observability profiling
+              hooks
               (``repro.obs.profiling``) and renders achieved GFLOP/s and
               GB/s per (kernel, impl, shape) — the measured points to place
               against the analytic roofline above:

@@ -28,7 +28,7 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table1_vit,fig3,"
                          "table3,table4,table5,table6,async_drift,"
-                         "exec_scaling,transport,scenario_matrix")
+                         "exec_scaling,transport,fused_agg,scenario_matrix")
     ap.add_argument("--bench-dir", default=".",
                     help="directory for the BENCH_*.json perf-trajectory "
                          "documents (exec_scaling/transport jobs)")
@@ -39,7 +39,8 @@ def main(argv=None):
     from benchmarks import (table1_noniid, fig3_drift, table3_llm,
                             table4_beta, table5_ablation, table6_comm,
                             seed_robustness, async_drift, executor_scaling,
-                            transport_bench, scenario_matrix)
+                            transport_bench, fused_agg_bench,
+                            scenario_matrix)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
@@ -55,6 +56,9 @@ def main(argv=None):
         ("async_drift", lambda: async_drift.run(quick=quick)),
         ("exec_scaling", lambda: executor_scaling.run(quick=quick)),
         ("transport", lambda: transport_bench.run(quick=quick)),
+        # standalone micro-bench (no training): the same rows also ride
+        # inside the transport job's BENCH_transport.json
+        ("fused_agg", lambda: fused_agg_bench.run(quick=quick)),
         ("scenario_matrix", lambda: scenario_matrix.run(quick=quick)),
         ("robust", lambda: seed_robustness.run(quick=quick)),
     ]

@@ -9,10 +9,14 @@ Every byte count is measured from the encoded wire messages
     than the same codec without it (the residual is delayed, not lost).
 
 Returns the structured ``BENCH_transport.json`` row list
-(``{"name", "us_per_call", "derived": {...}}`` — see ``repro.obs.bench``).
+(``{"name", "us_per_call", "derived": {...}}`` — see ``repro.obs.bench``),
+including the fused decode-aggregate micro-bench rows
+(``benchmarks.fused_agg_bench``: fused-vs-decode x wire_dtype x cohort),
+so the perf-trajectory document carries the fused-path headline.
 """
 from __future__ import annotations
 
+from benchmarks import fused_agg_bench
 from benchmarks.common import run_algorithm, emit
 
 SCENARIO = "cifar_like_cnn_dir0.05"
@@ -77,6 +81,9 @@ def run(quick: bool = True):
                              "noef_loss": float(results[False]),
                              "ef_better":
                                  bool(results[True] < results[False])}})
+
+    # --- fused decode-aggregate flush (Codec.accumulate) -----------------
+    rows.extend(fused_agg_bench.run(quick=quick))
     return rows
 
 

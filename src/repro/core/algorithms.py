@@ -37,11 +37,13 @@ from repro import optim
 from repro.core.client import LocalRunConfig, client_round
 from repro.core.engine import (
     AggregationConfig, BETA_MAX_AUTO, ExecutorConfig, advance_server,
-    aggregate, make_cohort_executor, make_controller, update_controller,
+    aggregate, aggregate_wire, make_cohort_executor, make_controller,
+    update_controller,
 )
 from repro.core.server import ServerState
 from repro.core import transport as T
 from repro.optim.api import LocalOptimizer
+from repro.utils import hw
 
 
 class UnknownAlgorithmError(ValueError):
@@ -125,17 +127,21 @@ class AlgorithmSpec:
     def make_transport(self, *, rank: int = 8, block: int = 128,
                        sketch_iters: int = 2, delta_codec=None,
                        theta_codec=None, error_feedback: bool = True,
-                       use_pallas: bool = False,
-                       interpret: Optional[bool] = None) -> T.Transport:
+                       use_pallas: Optional[bool] = None,
+                       interpret: Optional[bool] = None,
+                       wire_dtype: str = "f32") -> T.Transport:
         """Resolve this spec's wire policy (``delta_codec``/``theta_codec``
         override the spec's declared codec specs, e.g. from FedConfig).
-        ``interpret=None`` picks Pallas interpret mode automatically: real
-        kernels on TPU, interpreter everywhere else."""
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
+        ``use_pallas=None``/``interpret=None`` resolve through the shared
+        backend auto rule (``repro.utils.hw``): real Pallas kernels on
+        TPU, the jnp reference/interpreter everywhere else.
+        ``wire_dtype`` caps floating payload dtypes on the wire
+        ("f32" native | "bf16")."""
         cfg = T.TransportConfig(rank=rank, block=block,
                                 sketch_iters=sketch_iters,
-                                use_pallas=use_pallas, interpret=interpret)
+                                use_pallas=hw.resolve_use_pallas(use_pallas),
+                                interpret=hw.resolve_interpret(interpret),
+                                wire_dtype=wire_dtype)
         return T.Transport(
             delta=T.resolve_codec(
                 self.delta_upload if delta_codec is None else delta_codec,
@@ -331,10 +337,14 @@ def build_round_fn(
 
     ``transport`` routes the uploads through wire-true codecs: each client
     encodes its delta (error-compensated for lossy codecs) and, for
-    aligned algorithms, its Theta; the server decodes the stacked wire
-    messages before aggregation and reports the measured ``upload_bytes``.
-    ``compress_fn`` is the legacy stacked Theta round-trip (exclusive with
-    ``transport``); None for both is the plain dense path.
+    aligned algorithms, its Theta; the server runs the *fused* flush
+    (``engine.aggregate_wire``) — encoded uploads accumulate straight into
+    the weighted sums via ``Codec.accumulate``, never materializing the
+    decoded per-client stack — and reports the measured ``upload_bytes``.
+    Algorithms with a ``mixing`` hook (which consumes the decoded cohort)
+    fall back to decode-then-``aggregate``.  ``compress_fn`` is the legacy
+    stacked Theta round-trip (exclusive with ``transport``); None for both
+    is the plain dense path.
 
     ``telemetry=True`` additionally computes the jit-pure ``Telemetry``
     diagnostics (``repro.obs.telemetry``) inside the round and returns the
@@ -353,6 +363,9 @@ def build_round_fn(
             f"({'error-feedback residuals' if not has_algo_state else 'declared algorithm state'}); "
             "build_round_fn needs n_clients")
     encode_theta = transport is not None and spec.align
+    # the fused wire path needs no decoded cohort; mixing hooks consume
+    # the decoded stacks, so they keep the decode-then-aggregate path
+    fused = transport is not None and spec.mixing is None
     default_ctrl = make_controller(beta, correct=spec.correct,
                                    beta_max=beta_max, ema=drift_ema)
     run = LocalRunConfig(lr=lr, local_steps=local_steps, beta=0.0,
@@ -382,12 +395,14 @@ def build_round_fn(
                 batch_i=batch_i, key_i=key_i)
             if transport is None:
                 return delta, theta_out, algo_out, loss
-            # client-side encode: what leaves the client IS the wire msg;
-            # under EF the decode needed for the residual doubles as the
-            # server-side reconstruction (no second decode pass)
+            # client-side encode: what leaves the client IS the wire msg.
+            # The fused server path reduces wire messages directly, so the
+            # decoded tree stays a client-local transient (it still forms
+            # the EF residual); only the decode-then-aggregate fallback
+            # (mixing hooks) reuses it server-side.
             dmsg, decoded, new_residual = T.encode_with_feedback(
                 transport.delta, delta, residual)
-            dchan = (dmsg, decoded) if ef_active else dmsg
+            dchan = (dmsg, decoded) if (ef_active and not fused) else dmsg
             tmsg = (transport.theta.encode(theta_out) if encode_theta
                     else theta_out)
             if ef_active:
@@ -399,29 +414,47 @@ def build_round_fn(
 
         deltas, thetas, outs, losses = cohort_exec(
             one_client, cohort, batches, keys)
-        if transport is not None:
-            # server-side decode of the stacked wire messages; byte counts
-            # are static shape math over those same structures
-            if ef_active:
-                dmsgs, deltas = deltas
-                up_bytes = T.wire_bytes(dmsgs)
-            else:
-                up_bytes = T.wire_bytes(deltas)
-                deltas = jax.vmap(transport.delta.decode)(deltas)
+        step = None
+        weights = jnp.ones((s,), jnp.float32)
+        if fused:
+            # fused wire path: the stacked messages reduce straight into
+            # the weighted sums (Codec.accumulate); byte counts are static
+            # shape math over those same structures, recorded as the exact
+            # total + cohort size (no truncating division)
+            up_bytes = T.wire_bytes(deltas)
             if encode_theta:
                 up_bytes += T.wire_bytes(thetas)
-                thetas = jax.vmap(transport.theta.decode)(thetas)
-            wire_cell["per_client"] = up_bytes // s
-        elif compress_fn is not None and thetas is not None:
-            # legacy path: clients upload compressed Theta; server
-            # aggregates the decoded reconstruction (Table 6 trade-off)
-            thetas = compress_fn(thetas)
-        if spec.mixing is not None:
-            weights = spec.mixing(deltas, thetas)
+            wire_cell["total"] = up_bytes
+            wire_cell["cohort"] = s
+            new_params, new_theta, new_g, agg, aux = aggregate_wire(
+                params, theta, g_global, deltas, weights, agg_cfg,
+                transport, tmsgs=thetas if encode_theta else None,
+                thetas=None if encode_theta else thetas,
+                need_thetas=telemetry)
+            deltas, thetas, step = None, aux["thetas"], aux["step"]
         else:
-            weights = jnp.ones((s,), jnp.float32)
-        new_params, new_theta, new_g, agg = aggregate(
-            params, theta, g_global, deltas, thetas, weights, agg_cfg)
+            if transport is not None:
+                # decode-then-aggregate fallback: mixing hooks consume the
+                # decoded cohort, so it must materialize here
+                if ef_active:
+                    dmsgs, deltas = deltas
+                    up_bytes = T.wire_bytes(dmsgs)
+                else:
+                    up_bytes = T.wire_bytes(deltas)
+                    deltas = jax.vmap(transport.delta.decode)(deltas)
+                if encode_theta:
+                    up_bytes += T.wire_bytes(thetas)
+                    thetas = jax.vmap(transport.theta.decode)(thetas)
+                wire_cell["total"] = up_bytes
+                wire_cell["cohort"] = s
+            elif compress_fn is not None and thetas is not None:
+                # legacy path: clients upload compressed Theta; server
+                # aggregates the decoded reconstruction (Table 6 trade-off)
+                thetas = compress_fn(thetas)
+            if spec.mixing is not None:
+                weights = spec.mixing(deltas, thetas)
+            new_params, new_theta, new_g, agg = aggregate(
+                params, theta, g_global, deltas, thetas, weights, agg_cfg)
         new_cstate = (state_proto.server_update(cstate, cohort, outs,
                                                 n_clients)
                       if state_proto is not None else cstate)
@@ -431,7 +464,7 @@ def build_round_fn(
         if telemetry:
             from repro.obs import telemetry as obs_telemetry
             metrics["telemetry"] = obs_telemetry.collect(
-                deltas=deltas, thetas=thetas, weights=weights,
+                deltas=deltas, step=step, thetas=thetas, weights=weights,
                 g_global=g_global, ctrl=ctrl, new_ctrl=new_ctrl,
                 agg_metrics=agg)
         return new_params, new_theta, new_g, new_ctrl, new_cstate, metrics
@@ -449,9 +482,12 @@ def build_round_fn(
             server.params, theta, server.g_global, ctrl, cstate, cohort,
             batches, rng)
         if transport is not None:
-            # exact host-side int captured at trace time (never a lossy
-            # f32 device scalar)
-            metrics = dict(metrics, upload_bytes=wire_cell["per_client"])
+            # exact host-side ints captured at trace time (never lossy f32
+            # device scalars); upload_bytes keeps its historical per-client
+            # meaning while the untruncated total rides along
+            total, cohort = wire_cell["total"], wire_cell["cohort"]
+            metrics = dict(metrics, upload_bytes=total // cohort,
+                           upload_total_bytes=total, cohort_size=cohort)
         new_server = advance_server(server, p, th, g, geom=new_ctrl,
                                     aligned=spec.align)
         return new_server, new_cstate, metrics

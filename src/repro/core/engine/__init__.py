@@ -11,8 +11,9 @@ Layering (top to bottom):
   kernels      Pallas TPU kernels for the second-order hot paths
 """
 from repro.core.engine.aggregation import (
-    AggregationConfig, aggregate, aggregate_round, advance_server,
-    precond_mixing_weights, weighted_client_mean, normalized_client_mean,
+    AggregationConfig, aggregate, aggregate_round, aggregate_wire,
+    advance_server, precond_mixing_weights, weighted_client_mean,
+    normalized_client_mean,
 )
 from repro.core.engine.geometry import (
     BETA_MAX_AUTO, GeometryController, auto_controller, fixed_controller,

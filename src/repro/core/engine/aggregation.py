@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.drift import drift_metric
 from repro.core.server import ServerState
-from repro.utils.tree import tree_norm_sq
+from repro.utils.tree import client_weighted_sum, tree_norm_sq
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,26 +52,24 @@ def weighted_client_mean(tree, weights=None):
     w_i in (0,1] shrink the contribution of stale clients rather than
     re-normalizing it away, so a fully-stale buffer takes a smaller server
     step.  weights=None is the uniform mean (w_i = 1).
+
+    The weighted form lowers to one ``dot_general`` contraction of the
+    weight vector against the client axis (``utils.tree
+    .client_weighted_sum``) — the legacy w-scaled f32 copy of every
+    stacked leaf is never materialized.
     """
     if weights is None:
         return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
-    w = weights.astype(jnp.float32)
-    return jax.tree.map(
-        lambda x: jnp.mean(
-            w.reshape((-1,) + (1,) * (x.ndim - 1)) * x.astype(jnp.float32),
-            axis=0),
-        tree)
+    b = weights.shape[0]
+    return jax.tree.map(lambda x: x / b, client_weighted_sum(tree, weights))
 
 
 def normalized_client_mean(tree, weights):
-    """sum_i w_i x_i / sum_i w_i over the leading client axis."""
+    """sum_i w_i x_i / sum_i w_i over the leading client axis (one
+    ``dot_general`` contraction, no w-scaled stacked copy)."""
     w = weights.astype(jnp.float32)
     denom = jnp.sum(w) + 1e-12
-    return jax.tree.map(
-        lambda x: jnp.sum(
-            w.reshape((-1,) + (1,) * (x.ndim - 1)) * x.astype(jnp.float32),
-            axis=0) / denom,
-        tree)
+    return jax.tree.map(lambda x: x / denom, client_weighted_sum(tree, w))
 
 
 def precond_mixing_weights(deltas, thetas, eps: float = 1e-8):
@@ -100,36 +98,32 @@ def precond_mixing_weights(deltas, thetas, eps: float = 1e-8):
     return w / (jnp.mean(w) + eps)
 
 
-def aggregate(params, theta, g_global, deltas, thetas, weights,
-              cfg: AggregationConfig):
-    """One server update from a stacked cohort.
-
-    deltas: pytree with leading (B,) client axis; thetas: same, or None for
-    first-order algorithms (no geometry to aggregate — drift reports 0).
-    weights: (B,) per-client weights; jnp.ones for a synchronous round.
-    Returns (new_params, new_theta, new_g, metrics).
-    """
-    w = weights.astype(jnp.float32)
+def _finish_update(params, theta, g_global, delta_wsum, w,
+                   cfg: AggregationConfig, theta_stats):
+    """Shared tail of ``aggregate``/``aggregate_wire``: apply Alg. 2 lines
+    14-17 given sum_i w_i Delta_i and the Theta statistics
+    ``(drift, sum_i w_i Theta_i)`` (None for first-order cohorts)."""
+    b = w.shape[0]
     rho = jnp.mean(w)                       # cohort freshness in (0, 1]
-    step = weighted_client_mean(deltas, w)  # (1/B) sum_i w_i Delta_i
+    denom = jnp.sum(w) + 1e-12
+    step = jax.tree.map(lambda x: x / b, delta_wsum)
     new_params = jax.tree.map(
         lambda p, d: (p.astype(jnp.float32)
                       + cfg.server_lr * d).astype(p.dtype), params, step)
     # g_G estimate is w-normalized — only the parameter *step* shrinks with
     # staleness, not the magnitude of the direction (Alg. 2 line 14).
     g_batch = jax.tree.map(
-        lambda d: -d / (cfg.local_steps * cfg.lr),
-        normalized_client_mean(deltas, w))
+        lambda x: -(x / denom) / (cfg.local_steps * cfg.lr), delta_wsum)
     new_g = jax.tree.map(lambda old, gb: (1.0 - rho) * old + rho * gb,
                          g_global, g_batch)
 
-    if thetas is None:
+    if theta_stats is None:
         new_theta = theta
         drift = jnp.zeros((), jnp.float32)
         norm_drift = jnp.zeros((), jnp.float32)
     else:
-        drift = drift_metric(thetas)
-        theta_batch = normalized_client_mean(thetas, w)
+        drift, theta_wsum = theta_stats
+        theta_batch = jax.tree.map(lambda x: x / denom, theta_wsum)
         norm_drift = drift / (tree_norm_sq(theta_batch) + 1e-12)
         if cfg.align:
             # Theta is a reference geometry, not a step: freshness-mixed so
@@ -144,6 +138,83 @@ def aggregate(params, theta, g_global, deltas, thetas, weights,
             new_theta = theta
     metrics = {"drift": drift, "norm_drift": norm_drift, "freshness": rho}
     return new_params, new_theta, new_g, metrics
+
+
+def aggregate(params, theta, g_global, deltas, thetas, weights,
+              cfg: AggregationConfig):
+    """One server update from a stacked cohort.
+
+    deltas: pytree with leading (B,) client axis; thetas: same, or None for
+    first-order algorithms (no geometry to aggregate — drift reports 0).
+    weights: (B,) per-client weights; jnp.ones for a synchronous round.
+    Returns (new_params, new_theta, new_g, metrics).
+    """
+    w = weights.astype(jnp.float32)
+    delta_wsum = client_weighted_sum(deltas, w)
+    theta_stats = (None if thetas is None else
+                   (drift_metric(thetas), client_weighted_sum(thetas, w)))
+    return _finish_update(params, theta, g_global, delta_wsum, w, cfg,
+                          theta_stats)
+
+
+def aggregate_wire(params, theta, g_global, dmsgs, weights,
+                   cfg: AggregationConfig, transport, *, tmsgs=None,
+                   thetas=None, need_thetas: bool = False):
+    """The fused wire-native server update: accumulate encoded uploads
+    straight into the running weighted sums (``Codec.accumulate``) instead
+    of decoding the cohort to a dense stack first.
+
+    dmsgs: cohort-stacked delta ``WireMsg``.  Theta uploads arrive either
+    as stacked wire messages (``tmsgs``, aligned algorithms) or as an
+    already-dense stacked tree (``thetas``, align=False uploads are not
+    encoded); pass neither for first-order cohorts.  Lossless theta codecs
+    decode (free for dense — the payload IS the leaf) and take the exact
+    classic drift path, so the result is bitwise-identical to
+    decode-then-``aggregate``; lossy codecs compute drift wire-natively
+    from per-client squared norms (Def. 1 decomposed as
+    mean_i ||Theta_i||^2 - ||mean_i Theta_i||^2, clamped at 0).
+
+    ``need_thetas=True`` additionally decodes the stacked thetas (the
+    telemetry geometry sketch needs per-client values) — training numerics
+    do NOT change with this flag; the lossy drift stays wire-native.
+
+    Returns (new_params, new_theta, new_g, metrics, aux); ``aux["step"]``
+    is the reusable weighted delta mean and ``aux["thetas"]`` the decoded
+    stack (or None) for telemetry.
+    """
+    if tmsgs is not None and thetas is not None:
+        raise ValueError("pass theta uploads as tmsgs (wire) or thetas "
+                         "(dense), not both")
+    w = weights.astype(jnp.float32)
+    b = w.shape[0]
+    delta_wsum = transport.delta.accumulate(dmsgs, w)
+
+    thetas_dec = thetas
+    if tmsgs is not None:
+        if transport.theta.lossless:
+            # exact path: decode (free for dense) and reuse the classic
+            # drift — bitwise parity with decode-then-aggregate
+            thetas_dec = jax.vmap(transport.theta.decode)(tmsgs)
+            theta_stats = (drift_metric(thetas_dec),
+                           client_weighted_sum(thetas_dec, w))
+        else:
+            if need_thetas:
+                thetas_dec = jax.vmap(transport.theta.decode)(tmsgs)
+            sq = transport.theta.sq_norms(tmsgs)
+            usum = transport.theta.accumulate(
+                tmsgs, jnp.ones((b,), jnp.float32))
+            ubar_sq = tree_norm_sq(jax.tree.map(lambda x: x / b, usum))
+            drift = jnp.maximum(jnp.mean(sq) - ubar_sq, 0.0)
+            theta_stats = (drift, transport.theta.accumulate(tmsgs, w))
+    elif thetas is not None:
+        theta_stats = (drift_metric(thetas), client_weighted_sum(thetas, w))
+    else:
+        theta_stats = None
+
+    out = _finish_update(params, theta, g_global, delta_wsum, w, cfg,
+                         theta_stats)
+    step = jax.tree.map(lambda x: x / b, delta_wsum)
+    return (*out, {"step": step, "thetas": thetas_dec})
 
 
 def advance_server(server: ServerState, params, theta, g_global, *,

@@ -14,9 +14,10 @@ Every upload in both runtimes is an encoded ``WireMsg``; every byte of
 communication accounting comes from ``wire_bytes`` of those messages.
 """
 from repro.core.transport.base import (
-    Codec, LeafMsg, Transport, TransportConfig, UnknownCodecError, WireMsg,
-    dense_leaf, register_codec, registered_codecs, resolve_codec,
-    validate_codec_spec, wire_bytes,
+    Codec, LeafMsg, Transport, TransportConfig, UnknownCodecError,
+    WIRE_DTYPES, WireMsg, dense_leaf, register_codec, registered_codecs,
+    resolve_codec, validate_codec_spec, validate_wire_dtype, wire_bytes,
+    wire_cast,
 )
 from repro.core.transport.dense import Dense
 from repro.core.transport.lowrank import LowRankSVD, PowerSketch
@@ -29,7 +30,8 @@ from repro.core.transport.error_feedback import (
 __all__ = [
     "Chain", "Codec", "Dense", "LeafMsg", "LowRankSVD", "PowerSketch",
     "QBlock", "Transport", "TransportConfig", "UnknownCodecError",
-    "WireMsg", "dense_leaf", "ef_init", "ef_scatter", "ef_view",
-    "encode_with_feedback", "register_codec", "registered_codecs",
-    "resolve_codec", "validate_codec_spec", "wire_bytes",
+    "WIRE_DTYPES", "WireMsg", "dense_leaf", "ef_init", "ef_scatter",
+    "ef_view", "encode_with_feedback", "register_codec",
+    "registered_codecs", "resolve_codec", "validate_codec_spec",
+    "validate_wire_dtype", "wire_bytes", "wire_cast",
 ]

@@ -30,9 +30,36 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.utils import hw
+from repro.utils.tree import client_weighted_sum
+
 
 class UnknownCodecError(ValueError):
     """Codec spec names no registered codec."""
+
+
+# wire dtypes: "f32" ships floating payloads in their native dtype (the
+# legacy, lossless wire format); "bf16" halves every floating payload on
+# the wire (dense leaves, low-rank/sketch factors — qblock is already
+# int8 + f32 scales and is unaffected).  Decode always casts back to the
+# envelope's original dtype.
+WIRE_DTYPES = {"f32": None, "bf16": jnp.bfloat16}
+
+
+def validate_wire_dtype(name: str) -> str:
+    if name not in WIRE_DTYPES:
+        raise ValueError(
+            f"unknown wire_dtype {name!r} (want one of "
+            f"{tuple(sorted(WIRE_DTYPES))})")
+    return name
+
+
+def wire_cast(leaf, wire_dtype: str):
+    """Cast a floating payload to the wire dtype ("f32" ships native)."""
+    dt = WIRE_DTYPES[wire_dtype]
+    if dt is None or not jnp.issubdtype(jnp.dtype(leaf.dtype), jnp.floating):
+        return leaf
+    return leaf.astype(dt)
 
 
 @functools.partial(jax.tree_util.register_dataclass,
@@ -73,10 +100,11 @@ def wire_bytes(msg) -> int:
     return int(total)
 
 
-def dense_leaf(leaf) -> LeafMsg:
-    """Passthrough envelope: the leaf itself is the payload."""
+def dense_leaf(leaf, wire_dtype: str = "f32") -> LeafMsg:
+    """Passthrough envelope: the leaf itself is the payload (cast to the
+    wire dtype on the way out; the envelope keeps the decode target)."""
     return LeafMsg("dense", tuple(leaf.shape), jnp.dtype(leaf.dtype),
-                   {"x": leaf})
+                   {"x": wire_cast(leaf, wire_dtype)})
 
 
 class Codec:
@@ -85,6 +113,14 @@ class Codec:
     Subclasses implement the per-leaf pair; ``encode``/``decode`` handle
     tree plumbing.  ``lossless`` declares bitwise round-trips (error
     feedback is skipped for lossless codecs).
+
+    ``accumulate``/``sq_norms`` are the *fused* server-side entry points:
+    they consume a cohort-stacked message (leading (B,) client axis on
+    every payload) and reduce it without materializing the decoded dense
+    stack.  The base fallbacks decode leaf-wise and contract — correct
+    for any codec, including chains — and wire-native subclasses override
+    them (qblock dequantize-accumulates through the ``kernels/fused_agg``
+    Pallas kernel, low-rank contracts the factors directly).
     """
     name: str = "codec"
     lossless: bool = False
@@ -94,7 +130,7 @@ class Codec:
 
     def decode_leaf(self, msg: LeafMsg):
         if msg.kind == "dense":
-            return msg.parts["x"]
+            return msg.parts["x"].astype(msg.dtype)
         raise NotImplementedError(
             f"{type(self).__name__} cannot decode kind {msg.kind!r}")
 
@@ -110,6 +146,39 @@ class Codec:
     def roundtrip(self, tree):
         """What the server reconstructs from this client's upload."""
         return self.decode(self.encode(tree))
+
+    # ------------------------------------------------- fused aggregation
+
+    def accumulate_leaf(self, msgs: LeafMsg, weights):
+        """sum_i w_i * decode(msg_i) for one stacked leaf, in f32.
+
+        Fallback: vmapped decode + the same ``dot_general`` contraction
+        the dense engine path uses (``utils.tree.client_weighted_sum``),
+        so a lossless codec's fused flush is bitwise-identical to
+        decode-then-aggregate."""
+        return client_weighted_sum(jax.vmap(self.decode_leaf)(msgs), weights)
+
+    def accumulate(self, msgs: WireMsg, weights):
+        """Fused decode-aggregate of a cohort-stacked message: the tree of
+        sum_i w_i * decode(msg_i).  weights: (B,)."""
+        return jax.tree.unflatten(
+            msgs.treedef,
+            [self.accumulate_leaf(m, weights) for m in msgs.leaves])
+
+    def sq_norms_leaf(self, msgs: LeafMsg):
+        """(B,) squared Frobenius norm of each client's decoded leaf."""
+        dec = jax.vmap(self.decode_leaf)(msgs)
+        x = dec.astype(jnp.float32).reshape(dec.shape[0], -1)
+        return jnp.sum(x * x, axis=-1)
+
+    def sq_norms(self, msgs: WireMsg):
+        """(B,) per-client squared norm over all leaves — the wire-native
+        half of the drift decomposition
+        drift = mean_i ||Theta_i||^2 - ||mean_i Theta_i||^2."""
+        total = jnp.zeros((), jnp.float32)
+        for m in msgs.leaves:
+            total = total + self.sq_norms_leaf(m)
+        return total
 
 
 # --------------------------------------------------------------- registry
@@ -131,12 +200,26 @@ def registered_codecs() -> tuple:
 
 @dataclasses.dataclass(frozen=True)
 class TransportConfig:
-    """Knobs shared by codec factories (one config, every codec)."""
+    """Knobs shared by codec factories (one config, every codec).
+
+    ``use_pallas``/``interpret`` default through the shared backend auto
+    rule (``repro.utils.hw``): real Pallas kernels on TPU, the jnp
+    reference/interpreter elsewhere — an accelerator host no longer
+    silently runs the reference path.  ``wire_dtype`` caps the dtype of
+    floating payloads ("f32" ships native; "bf16" halves dense payloads
+    and low-rank factors on the wire).
+    """
     rank: int = 8            # low-rank codecs (legacy FedConfig.svd_rank)
     block: int = 128         # qblock elements per scale
     sketch_iters: int = 2    # power_sketch subspace iterations
-    use_pallas: bool = False  # qblock: Pallas kernel vs jnp reference
-    interpret: bool = True   # qblock Pallas interpret-mode (CPU) fallback
+    use_pallas: bool = dataclasses.field(
+        default_factory=hw.default_use_pallas)   # Pallas kernel vs jnp ref
+    interpret: bool = dataclasses.field(
+        default_factory=hw.default_interpret)    # interpret-mode fallback
+    wire_dtype: str = "f32"  # floating payload dtype on the wire
+
+    def __post_init__(self):
+        validate_wire_dtype(self.wire_dtype)
 
 
 def _parse_spec(spec) -> list:

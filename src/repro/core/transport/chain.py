@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+
 from repro.core.transport.base import Codec, WireMsg
 
 
@@ -39,3 +41,19 @@ class Chain(Codec):
         for codec in reversed(self.stages):
             msg = codec.decode(msg)
         return msg
+
+    def _peel(self, msgs: WireMsg) -> WireMsg:
+        """Decode the outer stages of a cohort-stacked message, leaving the
+        innermost stage's (still stacked) message — its fused reduction
+        does the heavy lifting.  The outer payloads (e.g. quantized SVD
+        factors) are small relative to the dense tree, so decoding them
+        per client is cheap."""
+        for codec in reversed(self.stages[1:]):
+            msgs = jax.vmap(codec.decode)(msgs)
+        return msgs
+
+    def accumulate(self, msgs: WireMsg, weights):
+        return self.stages[0].accumulate(self._peel(msgs), weights)
+
+    def sq_norms(self, msgs: WireMsg):
+        return self.stages[0].sq_norms(self._peel(msgs))

@@ -1,8 +1,12 @@
 """Dense codec: the identity wire format (legacy upload path).
 
-Every leaf ships as-is; ``decode(encode(x))`` is bitwise ``x``, and
-``wire_bytes`` equals ``tree_bytes`` — the pre-transport per-round byte
-totals, reproduced exactly (tested in tests/test_transport.py).
+With the default ``wire_dtype="f32"`` every leaf ships as-is;
+``decode(encode(x))`` is bitwise ``x``, and ``wire_bytes`` equals
+``tree_bytes`` — the pre-transport per-round byte totals, reproduced
+exactly (tested in tests/test_transport.py).  ``wire_dtype="bf16"``
+halves every floating payload on the wire (decode casts back to the
+original dtype); the codec is then lossy, so error feedback activates
+for delta uploads like any other lossy codec.
 """
 from __future__ import annotations
 
@@ -10,22 +14,29 @@ import dataclasses
 
 from repro.core.transport.base import (
     Codec, LeafMsg, TransportConfig, dense_leaf, register_codec,
+    validate_wire_dtype,
 )
 
 
 @dataclasses.dataclass(frozen=True)
 class Dense(Codec):
+    wire_dtype: str = "f32"
     name = "dense"
-    lossless = True
+
+    def __post_init__(self):
+        validate_wire_dtype(self.wire_dtype)
+
+    @property
+    def lossless(self) -> bool:  # type: ignore[override]
+        return self.wire_dtype == "f32"
 
     def encode_leaf(self, leaf) -> LeafMsg:
-        return dense_leaf(leaf)
+        return dense_leaf(leaf, self.wire_dtype)
 
     def decode_leaf(self, msg: LeafMsg):
-        return msg.parts["x"]
+        return msg.parts["x"].astype(msg.dtype)
 
 
 @register_codec("dense")
 def _make_dense(cfg: TransportConfig) -> Dense:
-    del cfg
-    return Dense()
+    return Dense(wire_dtype=cfg.wire_dtype)

@@ -14,6 +14,12 @@ through dense.  This is the per-client analogue of the legacy stacked
 ``ndim >= 3`` rule, and — unlike the legacy pair — the exact set of
 compressed leaves is shared with accounting by construction, because
 accounting reads the encoded message.
+
+Server-side, ``accumulate_leaf`` contracts the w-scaled factors through
+one merged (m, B·r) x (B·r, n) GEMM (``kernels/fused_agg``) — the dense
+per-client reconstructions never exist — and ``sq_norms_leaf`` uses the
+r x r gram trick.  ``wire_dtype="bf16"`` ships the factors (and dense
+passthrough leaves) in bf16.
 """
 from __future__ import annotations
 
@@ -23,8 +29,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.transport.base import (
-    Codec, LeafMsg, TransportConfig, dense_leaf, register_codec,
+    Codec, LeafMsg, TransportConfig, WIRE_DTYPES, dense_leaf, register_codec,
+    validate_wire_dtype,
 )
+from repro.kernels.fused_agg import ops as fused_ops
 
 
 def _compressible(leaf, rank: int) -> bool:
@@ -32,43 +40,81 @@ def _compressible(leaf, rank: int) -> bool:
             and leaf.shape[-2] > rank)
 
 
+def _factor_dtype(leaf_dtype, wire_dtype: str):
+    """Factors ship in the leaf dtype, capped by the wire dtype."""
+    dt = WIRE_DTYPES[wire_dtype]
+    return leaf_dtype if dt is None else dt
+
+
+def _gram_sq_norms(lhs, rhs):
+    """(B,) squared Frobenius norms of sum-factored lhs @ rhs per client
+    via the r x r gram trick: ||L R||^2 = <LᵀL, R Rᵀ>."""
+    gl = jnp.einsum("...mr,...ms->...rs", lhs, lhs)
+    gr = jnp.einsum("...rn,...sn->...rs", rhs, rhs)
+    per = jnp.sum(gl * gr, axis=(-2, -1))
+    return jnp.sum(per.reshape(per.shape[0], -1), axis=-1)
+
+
 @dataclasses.dataclass(frozen=True)
 class LowRankSVD(Codec):
     rank: int = 8
+    wire_dtype: str = "f32"
     name = "lowrank_svd"
     lossless = False
 
+    def __post_init__(self):
+        validate_wire_dtype(self.wire_dtype)
+
     def encode_leaf(self, leaf) -> LeafMsg:
         if not _compressible(leaf, self.rank):
-            return dense_leaf(leaf)
+            return dense_leaf(leaf, self.wire_dtype)
         u, s, vt = jnp.linalg.svd(leaf.astype(jnp.float32),
                                   full_matrices=False)
         r = self.rank
-        parts = {"u": u[..., :, :r].astype(leaf.dtype),
-                 "s": s[..., :r].astype(leaf.dtype),
-                 "vt": vt[..., :r, :].astype(leaf.dtype)}
+        wd = _factor_dtype(leaf.dtype, self.wire_dtype)
+        parts = {"u": u[..., :, :r].astype(wd),
+                 "s": s[..., :r].astype(wd),
+                 "vt": vt[..., :r, :].astype(wd)}
         return LeafMsg("lowrank", tuple(leaf.shape), jnp.dtype(leaf.dtype),
                        parts)
 
     def decode_leaf(self, msg: LeafMsg):
         if msg.kind == "dense":
-            return msg.parts["x"]
+            return msg.parts["x"].astype(msg.dtype)
         u = msg.parts["u"].astype(jnp.float32)
         s = msg.parts["s"].astype(jnp.float32)
         vt = msg.parts["vt"].astype(jnp.float32)
         return ((u * s[..., None, :]) @ vt).astype(msg.dtype)
+
+    def accumulate_leaf(self, msgs: LeafMsg, weights):
+        if msgs.kind == "dense":
+            return super().accumulate_leaf(msgs, weights)
+        return fused_ops.lowrank_accumulate(
+            msgs.parts["u"], msgs.parts["s"], msgs.parts["vt"], weights)
+
+    def sq_norms_leaf(self, msgs: LeafMsg):
+        if msgs.kind == "dense":
+            return super().sq_norms_leaf(msgs)
+        u = msgs.parts["u"].astype(jnp.float32)
+        s = msgs.parts["s"].astype(jnp.float32)
+        vt = msgs.parts["vt"].astype(jnp.float32)
+        return _gram_sq_norms(u * s[..., None, :], vt)
 
 
 @dataclasses.dataclass(frozen=True)
 class PowerSketch(Codec):
     rank: int = 8
     iters: int = 2
+    wire_dtype: str = "f32"
     name = "power_sketch"
     lossless = False
 
+    def __post_init__(self):
+        validate_wire_dtype(self.wire_dtype)
+
     def encode_leaf(self, leaf) -> LeafMsg:
         if not _compressible(leaf, self.rank):
-            return dense_leaf(leaf)
+            return dense_leaf(leaf, self.wire_dtype)
         a = leaf.astype(jnp.float32)
         at = jnp.swapaxes(a, -1, -2)
         # fixed sketch: every client projects through the same Omega, so
@@ -84,21 +130,34 @@ class PowerSketch(Codec):
             z, _ = jnp.linalg.qr(at @ q)
             q, _ = jnp.linalg.qr(a @ z)
         b = jnp.swapaxes(q, -1, -2) @ a             # (..., r, n)
-        parts = {"q": q.astype(leaf.dtype), "b": b.astype(leaf.dtype)}
+        wd = _factor_dtype(leaf.dtype, self.wire_dtype)
+        parts = {"q": q.astype(wd), "b": b.astype(wd)}
         return LeafMsg("sketch", tuple(leaf.shape), jnp.dtype(leaf.dtype),
                        parts)
 
     def decode_leaf(self, msg: LeafMsg):
         if msg.kind == "dense":
-            return msg.parts["x"]
+            return msg.parts["x"].astype(msg.dtype)
         q = msg.parts["q"].astype(jnp.float32)
         b = msg.parts["b"].astype(jnp.float32)
         return (q @ b).astype(msg.dtype)
 
+    def accumulate_leaf(self, msgs: LeafMsg, weights):
+        if msgs.kind == "dense":
+            return super().accumulate_leaf(msgs, weights)
+        return fused_ops.sketch_accumulate(
+            msgs.parts["q"], msgs.parts["b"], weights)
+
+    def sq_norms_leaf(self, msgs: LeafMsg):
+        if msgs.kind == "dense":
+            return super().sq_norms_leaf(msgs)
+        return _gram_sq_norms(msgs.parts["q"].astype(jnp.float32),
+                              msgs.parts["b"].astype(jnp.float32))
+
 
 @register_codec("lowrank_svd")
 def _make_lowrank(cfg: TransportConfig) -> LowRankSVD:
-    return LowRankSVD(rank=cfg.rank)
+    return LowRankSVD(rank=cfg.rank, wire_dtype=cfg.wire_dtype)
 
 
 # legacy AlgorithmSpec.upload token for the *_light variants
@@ -107,4 +166,5 @@ register_codec("svd")(_make_lowrank)
 
 @register_codec("power_sketch")
 def _make_sketch(cfg: TransportConfig) -> PowerSketch:
-    return PowerSketch(rank=cfg.rank, iters=cfg.sketch_iters)
+    return PowerSketch(rank=cfg.rank, iters=cfg.sketch_iters,
+                       wire_dtype=cfg.wire_dtype)

@@ -4,8 +4,13 @@ Every leaf is flattened and quantized in blocks of ``block`` elements —
 n int8 values + ceil(n/block) f32 scales on the wire, a ~4x shrink for
 f32 trees with per-element error bounded by scale/2 per block.  The
 quantization pass is backed by the ``kernels/qblock`` Pallas kernel
-(ref/ops/kernel triad, interpret-mode fallback on CPU); the jnp reference
-is the default off-TPU.
+(ref/ops/kernel triad, interpret-mode fallback on CPU); server-side the
+codec never decodes a stacked cohort — ``accumulate_leaf`` folds the
+per-block scales into the client weights and runs the fused
+dequantize-accumulate pass (``kernels/fused_agg``) straight into the
+weighted sum.  The wire format is already int8 + f32 scales, so
+``wire_dtype`` does not apply.  ``use_pallas``/``interpret`` default
+through the shared backend auto rule (``repro.utils.hw``).
 """
 from __future__ import annotations
 
@@ -17,14 +22,18 @@ import jax.numpy as jnp
 from repro.core.transport.base import (
     Codec, LeafMsg, TransportConfig, register_codec,
 )
+from repro.kernels.fused_agg import ops as fused_ops
 from repro.kernels.qblock import ops
+from repro.utils import hw
 
 
 @dataclasses.dataclass(frozen=True)
 class QBlock(Codec):
     block: int = 128
-    use_pallas: bool = False
-    interpret: bool = True
+    use_pallas: bool = dataclasses.field(
+        default_factory=hw.default_use_pallas)
+    interpret: bool = dataclasses.field(
+        default_factory=hw.default_interpret)
     name = "qblock"
     lossless = False
 
@@ -43,7 +52,7 @@ class QBlock(Codec):
 
     def decode_leaf(self, msg: LeafMsg):
         if msg.kind == "dense":
-            return msg.parts["x"]
+            return msg.parts["x"].astype(msg.dtype)
         block = msg.extra
         q, scale = msg.parts["q"], msg.parts["scale"]
         pad = scale.shape[0] * block - q.shape[0]
@@ -51,6 +60,38 @@ class QBlock(Codec):
             q = jnp.pad(q, (0, pad))
         return ops.dequantize(q.reshape(scale.shape[0], block), scale,
                               msg.shape, msg.dtype)
+
+    def _stacked_blocks(self, msgs: LeafMsg):
+        """(B, nb, block) int8 + (B, nb) f32 from a cohort-stacked leaf."""
+        block = msgs.extra
+        q, scale = msgs.parts["q"], msgs.parts["scale"]
+        b, n = q.shape
+        nb = scale.shape[1]
+        pad = nb * block - n
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, pad)))
+        return q.reshape(b, nb, block), scale
+
+    def accumulate_leaf(self, msgs: LeafMsg, weights):
+        if msgs.kind == "dense":
+            return super().accumulate_leaf(msgs, weights)
+        q3, scale = self._stacked_blocks(msgs)
+        out = fused_ops.dequant_accumulate(
+            q3, scale, weights, use_pallas=self.use_pallas,
+            interpret=self.interpret)
+        n = math.prod(msgs.shape)
+        return out.reshape(-1)[:n].reshape(msgs.shape)
+
+    def sq_norms_leaf(self, msgs: LeafMsg):
+        if msgs.kind == "dense":
+            return super().sq_norms_leaf(msgs)
+        # ||q * s||^2 per block = s^2 * sum(q^2): the scales come out of
+        # the inner sum, so the pass stays on the int8 buffer
+        q3, scale = self._stacked_blocks(msgs)
+        qf = q3.astype(jnp.float32)
+        per_block = jnp.einsum("bnk,bnk->bn", qf, qf)
+        return jnp.einsum("bn,bn->b", per_block,
+                          scale.astype(jnp.float32) ** 2)
 
 
 @register_codec("qblock")

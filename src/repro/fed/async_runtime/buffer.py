@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import (
-    AggregationConfig, aggregate, update_controller,
+    AggregationConfig, aggregate, aggregate_wire, update_controller,
 )
 from repro.core.transport import wire_bytes
 from repro.fed.async_runtime.latency import LatencyModel
@@ -78,12 +78,17 @@ def make_async_aggregate_fn(*, lr: float, local_steps: int,
     jitted together.
 
     With ``transport`` (core.transport.Transport) the buffer entries are
-    stacked *wire messages* — deltas always, thetas too when ``align`` —
-    decoded here at the flush boundary; the measured per-client byte
-    count is static shape math, captured at trace time into the caller's
-    ``wire_cell`` dict (key "per_client") as an exact host-side int.
-    Without a transport the entries are dense trees (legacy path, kept
-    for the bitwise-equivalence tests).
+    stacked *wire messages* — deltas always, thetas too when ``align``.
+    Without a ``mixing`` hook the flush is *fused*: ``aggregate_wire``
+    reduces the encoded uploads straight into the weighted sums
+    (``Codec.accumulate``) and the decoded (B, ...) cohort stack never
+    materializes; with ``mixing`` (which consumes decoded cohorts) the
+    decode-then-aggregate fallback runs.  Byte accounting is static
+    shape math captured at trace time into the caller's ``wire_cell``
+    dict as the exact host-side total (key "total") plus the cohort size
+    (key "cohort") — no truncating per-client division.  Without a
+    transport the entries are dense trees (legacy path, kept for the
+    bitwise-equivalence tests).
 
     ``mixing`` is an optional AlgorithmSpec hook ``(deltas, thetas) ->
     (B,)`` (e.g. preconditioned mixing); its weights multiply the
@@ -98,21 +103,35 @@ def make_async_aggregate_fn(*, lr: float, local_steps: int,
     cfg = AggregationConfig(lr=lr, local_steps=local_steps,
                             server_lr=server_lr, align=align)
 
+    fused = transport is not None and mixing is None
+
     def flush(params, theta, g_global, ctrl, deltas, thetas, weights,
               staleness=None):
+        step = None
         if transport is not None:
             b = jax.tree.leaves(weights)[0].shape[0]
             up_bytes = wire_bytes(deltas)
-            deltas = jax.vmap(transport.delta.decode)(deltas)
             if align:
                 up_bytes += wire_bytes(thetas)
-                thetas = jax.vmap(transport.theta.decode)(thetas)
             if wire_cell is not None:
-                wire_cell["per_client"] = up_bytes // b
-        if mixing is not None:
-            weights = weights * mixing(deltas, thetas)
-        new_params, new_theta, new_g, agg = aggregate(
-            params, theta, g_global, deltas, thetas, weights, cfg)
+                wire_cell["total"] = up_bytes
+                wire_cell["cohort"] = b
+        if fused:
+            new_params, new_theta, new_g, agg, aux = aggregate_wire(
+                params, theta, g_global, deltas, weights, cfg, transport,
+                tmsgs=thetas if align else None,
+                thetas=None if align else thetas,
+                need_thetas=telemetry)
+            deltas, thetas, step = None, aux["thetas"], aux["step"]
+        else:
+            if transport is not None:
+                deltas = jax.vmap(transport.delta.decode)(deltas)
+                if align:
+                    thetas = jax.vmap(transport.theta.decode)(thetas)
+            if mixing is not None:
+                weights = weights * mixing(deltas, thetas)
+            new_params, new_theta, new_g, agg = aggregate(
+                params, theta, g_global, deltas, thetas, weights, cfg)
         # drift-adaptive rule, additionally backed off by the staleness of
         # the g_G estimate the next cohort will correct toward
         new_ctrl = update_controller(ctrl, agg["norm_drift"],
@@ -122,7 +141,7 @@ def make_async_aggregate_fn(*, lr: float, local_steps: int,
         if telemetry:
             from repro.obs import telemetry as obs_telemetry
             metrics["telemetry"] = obs_telemetry.collect(
-                deltas=deltas, thetas=thetas, weights=weights,
+                deltas=deltas, step=step, thetas=thetas, weights=weights,
                 g_global=g_global, ctrl=ctrl, new_ctrl=new_ctrl,
                 agg_metrics=agg, staleness=staleness)
         return new_params, new_theta, new_g, new_ctrl, metrics

@@ -238,9 +238,16 @@ class AsyncFederatedExperiment(FedExperiment):
         tele = metrics.pop("telemetry", None)
         self.last_telemetry = tele
         rec = {k: float(v) for k, v in metrics.items()}
-        if "per_client" in self._wire_cell:
-            # trace-time capture: exact host int, not a lossy f32 scalar
-            rec["upload_bytes"] = float(self._wire_cell["per_client"])
+        if "total" in self._wire_cell:
+            # trace-time capture: exact host ints, not lossy f32 scalars.
+            # upload_bytes stays the per-client figure the history always
+            # reported (exact for homogeneous cohorts); the untruncated
+            # total and cohort size ride along for heterogeneous audits.
+            total = int(self._wire_cell["total"])
+            cohort = int(self._wire_cell["cohort"])
+            rec["upload_bytes"] = float(total // cohort)
+            rec["upload_total_bytes"] = float(total)
+            rec["cohort_size"] = float(cohort)
         rec.update({
             "loss": float(np.mean([float(ev.payload["loss"])
                                    for ev in buffered])),

@@ -35,8 +35,11 @@ from repro.core.algorithms import (
     AlgorithmSpec, build_round_fn, init_round_client_state, resolve,
 )
 from repro.core.engine import BETA_MAX_AUTO, ExecutorConfig, make_controller
-from repro.core.transport import Transport, validate_codec_spec
+from repro.core.transport import (
+    Transport, validate_codec_spec, validate_wire_dtype,
+)
 from repro.fed.base import FedExperiment
+from repro.utils import hw
 from repro.fed.staging import stage_cohort_batches
 
 RUNTIMES = ("sync", "async")
@@ -66,7 +69,10 @@ class FedConfig:
     error_feedback: bool = True    # EF residuals for lossy delta codecs
     qblock_size: int = 128         # qblock codec: elements per scale
     sketch_iters: int = 2          # power_sketch subspace iterations
-    use_pallas: bool = False       # qblock: fused Pallas kernel (TPU)
+    use_pallas: Optional[bool] = None  # Pallas wire kernels; None -> auto
+                                       # (real kernels on TPU, off elsewhere)
+    wire_dtype: str = "f32"        # wire payload dtype: "f32" (native,
+                                   # lossless) | "bf16" (half-width uploads)
 
     def __post_init__(self):
         if not (0.0 < self.participation <= 1.0):
@@ -95,10 +101,11 @@ class FedConfig:
         if self.qblock_size < 1:
             raise ValueError(
                 f"qblock_size must be >= 1, got {self.qblock_size}")
-        if self.use_pallas and self.qblock_size % 128:
+        if hw.resolve_use_pallas(self.use_pallas) and self.qblock_size % 128:
             raise ValueError(
                 f"qblock_size must be a multiple of 128 (VPU lane width) "
-                f"when use_pallas=True, got {self.qblock_size}")
+                f"when Pallas kernels are enabled, got {self.qblock_size}")
+        validate_wire_dtype(self.wire_dtype)
         if self.sketch_iters < 0:
             raise ValueError(
                 f"sketch_iters must be >= 0, got {self.sketch_iters}")
@@ -113,7 +120,8 @@ class FedConfig:
             rank=self.svd_rank, block=self.qblock_size,
             sketch_iters=self.sketch_iters,
             delta_codec=self.delta_codec, theta_codec=self.theta_codec,
-            error_feedback=self.error_feedback, use_pallas=self.use_pallas)
+            error_feedback=self.error_feedback, use_pallas=self.use_pallas,
+            wire_dtype=self.wire_dtype)
 
 
 def parse_algorithm(name: str):

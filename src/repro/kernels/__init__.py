@@ -8,4 +8,6 @@ Each kernel package has:
 ns_ortho      : blocked matmul + fused NS-quintic epilogue (Muon, MXU-bound)
 sophia_update : fused momentum/clip/precondition pass (memory-bound)
 soap_rotate   : two-sided eigenbasis rotation + fused rotated Adam
+qblock        : fused blockwise int8 quantization (wire codec, memory-bound)
+fused_agg     : fused dequantize-accumulate server flush (memory-bound)
 """

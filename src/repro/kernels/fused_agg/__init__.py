@@ -1,0 +1,8 @@
+"""Fused decode-aggregate kernels for the wire-native server flush.
+
+Accumulates a stacked cohort of encoded uploads directly into the running
+weighted sum sum_i w_i * decode(msg_i) — the decoded per-client dense
+trees never exist.  ``dequant_accumulate`` (qblock int8 blocks, Pallas
+kernel) folds the per-block scales into the w_i multiply; the low-rank /
+sketch accumulators contract the factors through one merged GEMM.
+"""

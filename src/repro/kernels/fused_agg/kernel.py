@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused dequantize-accumulate of a stacked int8 buffer.
+
+The grid is (grid_rows, B) with the client axis innermost, so each output
+tile of the running weighted sum stays resident in VMEM while the kernel
+streams every client's int8 blocks through it exactly once — one HBM read
+of the quantized cohort, one write of the f32 sum, never a decoded
+per-client tensor.  The per-block scale and the client weight are folded
+into a single multiplier (computed outside the kernel, B*nb floats) so the
+inner loop is one int8->f32 cast, one multiply, one add per element.
+
+bm is a multiple of 32 so the int8 input respects its (32, 128) min tile;
+``block`` must be a multiple of 128 (VPU lanes).  Partial tiles are
+zero-padded outside the kernel — zero blocks accumulate nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+INT8_SUBLANES = 32
+
+
+def _fused_agg_kernel(ws_ref, q_ref, out_ref):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = q_ref[0].astype(jnp.float32)        # (bm, block)
+    out_ref[...] += ws_ref[0] * q           # ws (bm, 1) broadcasts per block
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def dequant_accumulate(q, scale, weights, *, bm: int = INT8_SUBLANES,
+                       interpret: bool = False):
+    """sum_i w_i * (q_i * scale_i): (B, nb, block) int8 + (B, nb) scales +
+    (B,) weights -> (nb, block) f32."""
+    n_clients, nb, block = q.shape
+    if block % LANES:
+        raise ValueError(
+            f"block must be a multiple of {LANES} (VPU lane width), "
+            f"got {block}")
+    grid_rows = -(-nb // bm)
+    nbp = grid_rows * bm
+    if nbp - nb:
+        q = jnp.pad(q, ((0, 0), (0, nbp - nb), (0, 0)))
+        scale = jnp.pad(scale, ((0, 0), (0, nbp - nb)))
+    ws = (weights.astype(jnp.float32)[:, None]
+          * scale.astype(jnp.float32))[..., None]       # (B, nbp, 1)
+
+    out = pl.pallas_call(
+        _fused_agg_kernel,
+        grid=(grid_rows, n_clients),
+        in_specs=[pl.BlockSpec((1, bm, 1), lambda i, b: (b, i, 0)),
+                  pl.BlockSpec((1, bm, block), lambda i, b: (b, i, 0))],
+        out_specs=pl.BlockSpec((bm, block), lambda i, b: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, block), jnp.float32),
+        interpret=interpret,
+    )(ws, q)
+    return out[:nb]

@@ -1,0 +1,27 @@
+"""Jitted wrappers for the fused decode-aggregate pass.
+
+``dequant_accumulate`` dispatches between the Pallas kernel (TPU;
+interpret mode for CPU validation) and the pure-jnp oracle; the low-rank
+and sketch accumulators are MXU-bound merged GEMMs where XLA's own
+lowering is already the right kernel, so they alias the reference.
+Defaults of ``None`` resolve through the shared backend auto rule
+(``repro.utils.hw``): real kernels on TPU, reference/interpreter
+elsewhere.
+"""
+from __future__ import annotations
+
+from repro.kernels.fused_agg import ref
+from repro.kernels.fused_agg.kernel import dequant_accumulate as _pallas
+from repro.utils import hw
+
+lowrank_accumulate = ref.lowrank_accumulate
+sketch_accumulate = ref.sketch_accumulate
+
+
+def dequant_accumulate(q, scale, weights, *, use_pallas=None,
+                       interpret=None):
+    """sum_i w_i * (q_i * scale_i) over the client axis (see ref)."""
+    if hw.resolve_use_pallas(use_pallas):
+        return _pallas(q, scale, weights,
+                       interpret=hw.resolve_interpret(interpret))
+    return ref.dequant_accumulate(q, scale, weights)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the fused decode-aggregate pass.
+
+Each function computes sum_i w_i * decode(enc_i) for one wire format
+without materializing the (B, ...) decoded cohort:
+
+  dequant_accumulate   qblock int8 blocks: the per-block scale and the
+                       client weight fold into one multiplier per block,
+                       so dequantization and the weighted reduction are a
+                       single pass over the int8 buffer
+  lowrank_accumulate   U·diag(s)·Vᵀ factors: (client, rank) merge into one
+                       contraction axis — a (m, B·r) x (B·r, n) GEMM —
+                       so the dense per-client outer products never exist
+  sketch_accumulate    power_sketch Q·B factors, same merged GEMM
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_accumulate(q, scale, weights):
+    """sum_i w_i * (q_i * scale_i) over the client axis.
+
+    q: (B, nb, block) int8 (zero-padded to whole blocks), scale: (B, nb)
+    f32, weights: (B,) -> (nb, block) f32.  Padding blocks carry q=0 so
+    they contribute nothing regardless of their scale.
+    """
+    ws = weights.astype(jnp.float32)[:, None] * scale.astype(jnp.float32)
+    return jnp.einsum("bn,bnk->nk", ws, q.astype(jnp.float32))
+
+
+def _merged_gemm(lhs, rhs):
+    """sum_i lhs_i @ rhs_i as one batched GEMM over a merged (B*r) axis.
+
+    lhs: (B, *batch, m, r), rhs: (B, *batch, r, n) -> (*batch, m, n).
+    """
+    b, r = lhs.shape[0], lhs.shape[-1]
+    lm = jnp.moveaxis(lhs, 0, -2)                      # (*batch, m, B, r)
+    lm = lm.reshape(*lm.shape[:-2], b * r)             # (*batch, m, B*r)
+    rm = jnp.moveaxis(rhs, 0, -3)                      # (*batch, B, r, n)
+    rm = rm.reshape(*rm.shape[:-3], b * r, rm.shape[-1])
+    return lm @ rm
+
+
+def lowrank_accumulate(u, s, vt, weights):
+    """sum_i w_i * U_i diag(s_i) V_iᵀ.  u: (B, *batch, m, r),
+    s: (B, *batch, r), vt: (B, *batch, r, n), weights: (B,)."""
+    ws = s.astype(jnp.float32) * weights.astype(jnp.float32).reshape(
+        (-1,) + (1,) * (s.ndim - 1))
+    us = u.astype(jnp.float32) * ws[..., None, :]
+    return _merged_gemm(us, vt.astype(jnp.float32))
+
+
+def sketch_accumulate(q, b, weights):
+    """sum_i w_i * Q_i B_i.  q: (B, *batch, m, r), b: (B, *batch, r, n)."""
+    qw = q.astype(jnp.float32) * weights.astype(jnp.float32).reshape(
+        (-1,) + (1,) * (q.ndim - 1))
+    return _merged_gemm(qw, b.astype(jnp.float32))

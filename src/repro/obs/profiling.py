@@ -1,5 +1,6 @@
 """Kernel profiling hooks: one timing harness over the ref/ops/kernel
-triads (``soap_rotate``, ``qblock``, ``ns_ortho``, ``sophia_update``).
+triads (``soap_rotate``, ``qblock``, ``ns_ortho``, ``sophia_update``,
+``fused_agg``).
 
 Each kernel package already pairs a pure-jnp oracle (``ref``) with a
 Pallas path (``ops`` dispatching to ``kernel``); this harness times both
@@ -25,13 +26,17 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.fused_agg.ops import dequant_accumulate
 from repro.kernels.ns_ortho.ops import newton_schulz
 from repro.kernels.qblock.ops import quantize
 from repro.kernels.soap_rotate.ops import soap_rotated_update
 from repro.kernels.sophia_update.ops import sophia_update
+from repro.utils import hw
 
-KERNELS = ("soap_rotate", "qblock", "ns_ortho", "sophia_update")
+KERNELS = ("soap_rotate", "qblock", "ns_ortho", "sophia_update",
+           "fused_agg")
 NS_STEPS = 5
+FUSED_AGG_COHORT = 8   # stacked client axis for the fused_agg case
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
@@ -96,6 +101,22 @@ def _cases(shape, block: int, interpret: bool):
                      ("pallas", dict(use_pallas=True, interpret=interpret))):
         fn = jax.jit(functools.partial(sophia_update, **kw))
         out.append(("sophia_update", impl, fn, (g, mom, h), sflops, sbytes))
+
+    # fused_agg: dequantize-and-accumulate B stacked int8 uploads into one
+    # f32 weighted sum — streams B*size int8 + B*(size/block) f32 scales,
+    # writes size f32 once (2 flops/element: scale-multiply + accumulate)
+    bsz = FUSED_AGG_COHORT
+    nb = max(1, size // block)
+    q = jax.random.randint(jax.random.key(5), (bsz, nb, block), -127, 128,
+                           jnp.int8)
+    scale = jnp.abs(_mk((bsz, nb), 6)) + 1e-3
+    wts = jnp.abs(_mk((bsz,), 7)) + 0.1
+    aflops = 2 * bsz * nb * block
+    abytes = bsz * nb * block + f32 * bsz * nb + f32 * nb * block
+    for impl, kw in (("ref", dict(use_pallas=False)),
+                     ("pallas", dict(use_pallas=True, interpret=interpret))):
+        fn = jax.jit(functools.partial(dequant_accumulate, **kw))
+        out.append(("fused_agg", impl, fn, (q, scale, wts), aflops, abytes))
     return out
 
 
@@ -105,11 +126,10 @@ def profile_kernels(shapes=((256, 256),), *, block: int = 128,
     """Time every triad at every shape; returns a list of records.
 
     ``interpret=None`` picks real Pallas kernels on TPU and the
-    interpreter elsewhere (the same auto rule the transport uses).
-    ``kernels`` restricts to a subset of ``KERNELS``.
+    interpreter elsewhere (``repro.utils.hw`` — the same auto rule the
+    transport uses).  ``kernels`` restricts to a subset of ``KERNELS``.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = hw.resolve_interpret(interpret)
     want = set(kernels) if kernels is not None else set(KERNELS)
     unknown = want - set(KERNELS)
     if unknown:

@@ -86,19 +86,27 @@ def client_geom_dist(thetas, s: int, rank: int = SKETCH_RANK):
     return total
 
 
-def collect(*, deltas, thetas, weights, g_global, ctrl, new_ctrl,
-            agg_metrics, staleness=None) -> Telemetry:
+def collect(*, deltas=None, step=None, thetas, weights, g_global, ctrl,
+            new_ctrl, agg_metrics, staleness=None) -> Telemetry:
     """Assemble one round's ``Telemetry`` from the engine's own arrays.
 
     Call *after* ``engine.aggregate`` + ``update_controller`` with the same
     decoded ``deltas``/``thetas`` and final ``weights`` the aggregate saw,
     the pre-round controller ``ctrl`` and post-update ``new_ctrl``, and the
-    aggregate's metrics dict.  ``staleness`` is the (S,) integer staleness
-    vector; None means a synchronous cohort (all zeros).
+    aggregate's metrics dict.  The fused wire path never materializes the
+    decoded delta stack — it passes the already-reduced weighted mean as
+    ``step`` instead of ``deltas`` (the two are interchangeable here: the
+    sync round and the async flush hand over the same reduction, keeping
+    zero-staleness telemetry bitwise).  ``staleness`` is the (S,) integer
+    staleness vector; None means a synchronous cohort (all zeros).
     """
+    if (deltas is None) == (step is None):
+        raise ValueError("pass exactly one of deltas (stacked cohort) or "
+                         "step (precomputed weighted client mean)")
     w = weights.astype(jnp.float32)
     s = w.shape[0]
-    step = weighted_client_mean(deltas, w)
+    if step is None:
+        step = weighted_client_mean(deltas, w)
     cos = (-tree_dot(step, g_global)
            / (jnp.sqrt(tree_norm_sq(step) * tree_norm_sq(g_global)) + 1e-12))
     if staleness is None:

@@ -1,3 +1,4 @@
+from repro.utils import hw
 from repro.utils.tree import (
     tree_add,
     tree_sub,
@@ -9,4 +10,5 @@ from repro.utils.tree import (
     tree_size,
     tree_bytes,
     tree_cast,
+    client_weighted_sum,
 )

@@ -1,0 +1,38 @@
+"""Backend detection shared by every Pallas dispatch site.
+
+One auto rule, defined once: real Pallas kernels on TPU, the interpreter
+(or the jnp reference path) everywhere else.  Transport codecs
+(``TransportConfig``/``QBlock``), the algorithm-level transport factory,
+and the kernel profiling harness all resolve their ``use_pallas`` /
+``interpret`` defaults here, so an accelerator host never silently runs
+the reference path just because a caller left the knobs at their CPU
+defaults.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def default_use_pallas() -> bool:
+    """Pallas kernels by default on TPU; jnp reference elsewhere."""
+    return on_tpu()
+
+
+def default_interpret() -> bool:
+    """Interpret-mode Pallas off-TPU (CPU validation), compiled on TPU."""
+    return not on_tpu()
+
+
+def resolve_interpret(interpret=None) -> bool:
+    """``None`` means auto; explicit booleans pass through."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def resolve_use_pallas(use_pallas=None) -> bool:
+    """``None`` means auto; explicit booleans pass through."""
+    return default_use_pallas() if use_pallas is None else bool(use_pallas)

@@ -48,6 +48,22 @@ def tree_zeros_like(a):
     return jax.tree.map(jnp.zeros_like, a)
 
 
+def client_weighted_sum(tree, weights):
+    """sum_i w_i x_i over the leading (client) axis of every leaf, in f32.
+
+    Lowered as a ``dot_general`` contraction of the weight vector against
+    the client axis: the w-scaled copy of the stacked leaf is never
+    materialized (the legacy formulation built a full (B, ...) f32
+    intermediate before reducing).
+    """
+    w = weights.astype(jnp.float32)
+    return jax.tree.map(
+        lambda x: jax.lax.dot_general(
+            w, x.astype(jnp.float32),
+            dimension_numbers=(((0,), (0,)), ((), ()))),
+        tree)
+
+
 def tree_dot(a, b):
     leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
     return sum(leaves)

@@ -1,0 +1,376 @@
+"""Fused decode-aggregate flush: the kernels/fused_agg triad, the
+Codec.accumulate/sq_norms protocol, aggregate_wire parity against
+decode-then-aggregate, wire_dtype round-trip properties, the shared
+backend auto rule, and the exact byte-accounting regression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    AggregationConfig, aggregate, aggregate_wire, make_controller,
+    normalized_client_mean, weighted_client_mean,
+)
+from repro.core.transport import (
+    Dense, Transport, TransportConfig, encode_with_feedback,
+    registered_codecs, resolve_codec, wire_bytes,
+)
+from repro.fed.async_runtime.buffer import make_async_aggregate_fn
+from repro.kernels.fused_agg import kernel as fused_kernel
+from repro.kernels.fused_agg import ops as fused_ops
+from repro.kernels.fused_agg import ref as fused_ref
+from repro.utils import hw
+from repro.utils.tree import client_weighted_sum
+
+KEY = jax.random.key(0)
+B = 5
+
+
+def _stacked(seed=0, b=B, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    return {"L": jax.random.normal(k1, (b, 16, 12)).astype(dtype),
+            "stack": jax.random.normal(k2, (b, 3, 10, 9)).astype(dtype),
+            "vec": jax.random.normal(k3, (b, 7)).astype(dtype)}
+
+
+def _weights(b=B):
+    return 0.25 + 0.75 * jax.random.uniform(jax.random.key(9), (b,))
+
+
+ALL_CODECS = sorted(set(registered_codecs()) | {"lowrank_svd+qblock"})
+
+
+# ----------------------------------------------------------- Pallas kernel
+
+@pytest.mark.parametrize("shape", [(3, 5, 128), (8, 70, 128), (2, 1, 256),
+                                   (4, 33, 128)])
+def test_dequant_accumulate_kernel_matches_ref(shape):
+    b, nb, block = shape
+    q = jax.random.randint(jax.random.key(1), shape, -127, 128, jnp.int8)
+    scale = jnp.abs(jax.random.normal(jax.random.key(2), (b, nb))) + 1e-3
+    w = _weights(b)
+    ref = fused_ref.dequant_accumulate(q, scale, w)
+    out = fused_kernel.dequant_accumulate(q, scale, w, interpret=True)
+    assert out.shape == (nb, block) and out.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_dequant_accumulate_kernel_rejects_bad_block():
+    q = jnp.zeros((2, 3, 64), jnp.int8)
+    with pytest.raises(ValueError, match="128"):
+        fused_kernel.dequant_accumulate(q, jnp.ones((2, 3)), jnp.ones((2,)),
+                                        interpret=True)
+
+
+def test_fused_ops_dispatch_paths_agree():
+    q = jax.random.randint(jax.random.key(3), (4, 6, 128), -127, 128,
+                           jnp.int8)
+    scale = jnp.abs(jax.random.normal(jax.random.key(4), (4, 6))) + 1e-3
+    w = _weights(4)
+    a = fused_ops.dequant_accumulate(q, scale, w, use_pallas=False)
+    bb = fused_ops.dequant_accumulate(q, scale, w, use_pallas=True,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_lowrank_accumulate_matches_per_client_loop():
+    b, m, r, n = 4, 10, 3, 8
+    u = jax.random.normal(jax.random.key(5), (b, m, r))
+    s = jnp.abs(jax.random.normal(jax.random.key(6), (b, r)))
+    vt = jax.random.normal(jax.random.key(7), (b, r, n))
+    w = _weights(b)
+    loop = sum(w[i] * (u[i] * s[i]) @ vt[i] for i in range(b))
+    fused = fused_ref.lowrank_accumulate(u, s, vt, w)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(loop),
+                               rtol=2e-6, atol=2e-6)
+    # batched leading dims (stacked matrices) contract per matrix
+    u4 = jax.random.normal(jax.random.key(8), (b, 2, m, r))
+    s4 = jnp.abs(jax.random.normal(jax.random.key(9), (b, 2, r)))
+    vt4 = jax.random.normal(jax.random.key(10), (b, 2, r, n))
+    fused4 = fused_ref.lowrank_accumulate(u4, s4, vt4, w)
+    loop4 = sum(w[i] * np.einsum("kmr,kr,krn->kmn", u4[i], s4[i], vt4[i])
+                for i in range(b))
+    np.testing.assert_allclose(np.asarray(fused4), np.asarray(loop4),
+                               rtol=2e-6, atol=2e-6)
+
+
+# ----------------------------------------- Codec.accumulate / sq_norms
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+def test_accumulate_matches_decode_then_contract(name):
+    cfg = TransportConfig(rank=4, use_pallas=False)
+    codec = resolve_codec(name, cfg)
+    msgs = jax.vmap(codec.encode)(_stacked())
+    w = _weights()
+    fused = codec.accumulate(msgs, w)
+    oracle = client_weighted_sum(jax.vmap(codec.decode)(msgs), w)
+    for a, bb in zip(jax.tree.leaves(fused), jax.tree.leaves(oracle)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_dense_accumulate_is_bitwise():
+    codec = Dense()
+    msgs = jax.vmap(codec.encode)(_stacked())
+    w = _weights()
+    fused = codec.accumulate(msgs, w)
+    oracle = client_weighted_sum(jax.vmap(codec.decode)(msgs), w)
+    for a, bb in zip(jax.tree.leaves(fused), jax.tree.leaves(oracle)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+def test_sq_norms_matches_decoded_norms(name):
+    cfg = TransportConfig(rank=4, use_pallas=False)
+    codec = resolve_codec(name, cfg)
+    msgs = jax.vmap(codec.encode)(_stacked())
+    sq = codec.sq_norms(msgs)
+    dec = jax.vmap(codec.decode)(msgs)
+    want = sum(np.sum(np.asarray(x, np.float32).reshape(B, -1) ** 2, axis=1)
+               for x in jax.tree.leaves(dec))
+    assert sq.shape == (B,)
+    np.testing.assert_allclose(np.asarray(sq), want, rtol=1e-4)
+
+
+# -------------------------------------------------- aggregate_wire parity
+
+def _server(seed=11):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    params = {"L": jax.random.normal(k1, (16, 12)),
+              "stack": jax.random.normal(k2, (3, 10, 9)),
+              "vec": jnp.zeros((7,))}
+    theta = jax.tree.map(lambda x: 0.1 * jnp.abs(x), params)
+    g = jax.tree.map(jnp.zeros_like, params)
+    return params, theta, g
+
+
+CFG = AggregationConfig(lr=0.05, local_steps=4)
+
+
+def test_aggregate_wire_dense_bitwise_equals_aggregate():
+    params, theta, g = _server()
+    deltas, thetas = _stacked(1), _stacked(2)
+    w = _weights()
+    tp = Transport(Dense(), Dense())
+    dmsgs = jax.vmap(tp.delta.encode)(deltas)
+    tmsgs = jax.vmap(tp.theta.encode)(thetas)
+    ref = aggregate(params, theta, g, deltas, thetas, w, CFG)
+    out = aggregate_wire(params, theta, g, dmsgs, w, CFG, tp, tmsgs=tmsgs)
+    for a, bb in zip(jax.tree.leaves(ref[:3]), jax.tree.leaves(out[:3])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+    for k in ("drift", "norm_drift", "freshness"):
+        assert float(ref[3][k]) == float(out[3][k])
+    # aux carries the reusable weighted mean for telemetry
+    step = jax.tree.map(lambda x: x / B, client_weighted_sum(deltas, w))
+    for a, bb in zip(jax.tree.leaves(step), jax.tree.leaves(out[4]["step"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+@pytest.mark.parametrize("name", ["qblock", "lowrank_svd",
+                                  "lowrank_svd+qblock"])
+def test_aggregate_wire_lossy_close_to_decode_then_aggregate(name):
+    params, theta, g = _server()
+    cfg = TransportConfig(rank=4, use_pallas=False)
+    codec = resolve_codec(name, cfg)
+    tp = Transport(codec, codec)
+    deltas, thetas = _stacked(3), _stacked(4)
+    w = _weights()
+    dmsgs = jax.vmap(codec.encode)(deltas)
+    tmsgs = jax.vmap(codec.encode)(thetas)
+    dec_d = jax.vmap(codec.decode)(dmsgs)
+    dec_t = jax.vmap(codec.decode)(tmsgs)
+    ref = aggregate(params, theta, g, dec_d, dec_t, w, CFG)
+    out = aggregate_wire(params, theta, g, dmsgs, w, CFG, tp, tmsgs=tmsgs)
+    for a, bb in zip(jax.tree.leaves(ref[:3]), jax.tree.leaves(out[:3])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(bb, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+    # the wire-native drift decomposition matches the classic centered
+    # form up to float error, and is clamped non-negative
+    assert float(out[3]["drift"]) >= 0.0
+    np.testing.assert_allclose(float(out[3]["drift"]),
+                               float(ref[3]["drift"]), rtol=1e-3, atol=1e-5)
+
+
+def test_aggregate_wire_need_thetas_does_not_change_numerics():
+    params, theta, g = _server()
+    codec = resolve_codec("qblock", TransportConfig(use_pallas=False))
+    tp = Transport(codec, codec)
+    dmsgs = jax.vmap(codec.encode)(_stacked(3))
+    tmsgs = jax.vmap(codec.encode)(_stacked(4))
+    w = _weights()
+    a = aggregate_wire(params, theta, g, dmsgs, w, CFG, tp, tmsgs=tmsgs,
+                       need_thetas=False)
+    bb = aggregate_wire(params, theta, g, dmsgs, w, CFG, tp, tmsgs=tmsgs,
+                        need_thetas=True)
+    assert a[4]["thetas"] is None and bb[4]["thetas"] is not None
+    for x, y in zip(jax.tree.leaves(a[:4]), jax.tree.leaves(bb[:4])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_aggregate_wire_rejects_both_theta_channels():
+    params, theta, g = _server()
+    tp = Transport(Dense(), Dense())
+    dmsgs = jax.vmap(tp.delta.encode)(_stacked(1))
+    tmsgs = jax.vmap(tp.theta.encode)(_stacked(2))
+    with pytest.raises(ValueError, match="not both"):
+        aggregate_wire(params, theta, g, dmsgs, _weights(), CFG, tp,
+                       tmsgs=tmsgs, thetas=_stacked(2))
+
+
+def test_fused_async_flush_matches_aggregate_wire_bitwise():
+    """The jitted fused flush (no mixing) routes through the exact same
+    aggregate_wire the sync round uses — same inputs, same bits."""
+    params, theta, g = _server()
+    codec = resolve_codec("qblock", TransportConfig(use_pallas=False))
+    tp = Transport(codec, codec)
+    dmsgs = jax.vmap(codec.encode)(_stacked(3))
+    tmsgs = jax.vmap(codec.encode)(_stacked(4))
+    w = jnp.ones((B,), jnp.float32)          # zero-staleness buffer
+    ctrl = make_controller(0.5, correct=True)
+    cell = {}
+    flush = make_async_aggregate_fn(lr=CFG.lr, local_steps=CFG.local_steps,
+                                    transport=tp, wire_cell=cell)
+    fp, ft, fg, _, fm = flush(params, theta, g, ctrl, dmsgs, tmsgs, w)
+    wire_fn = jax.jit(lambda p, th, gg, dm, tm, ww: aggregate_wire(
+        p, th, gg, dm, ww, CFG, tp, tmsgs=tm))
+    wp, wt, wg, wm, _ = wire_fn(params, theta, g, dmsgs, tmsgs, w)
+    for a, bb in zip(jax.tree.leaves((fp, ft, fg)),
+                     jax.tree.leaves((wp, wt, wg))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+    assert float(fm["drift"]) == float(wm["drift"])
+    # S1 regression: the wire cell records the exact total, not a
+    # truncating per-client division
+    assert cell["total"] == wire_bytes(dmsgs) + wire_bytes(tmsgs)
+    assert cell["cohort"] == B
+
+
+# ------------------------------------------------- contraction rewrite (S2)
+
+def test_weighted_client_mean_is_dot_general_bitwise():
+    tree = _stacked(7)
+    w = _weights()
+    got = weighted_client_mean(tree, w)
+    for leaf, out in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        oracle = jax.lax.dot_general(
+            w.astype(jnp.float32), leaf.astype(jnp.float32),
+            dimension_numbers=(((0,), (0,)), ((), ()))) / B
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+        # and agrees with the legacy w-scaled-copy formulation numerically
+        legacy = jnp.mean(w.reshape((B,) + (1,) * (leaf.ndim - 1)) * leaf,
+                          axis=0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(legacy),
+                                   rtol=1e-5, atol=1e-6)
+    # weights=None stays the plain uniform mean, bitwise
+    for leaf, out in zip(jax.tree.leaves(tree),
+                         jax.tree.leaves(weighted_client_mean(tree))):
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(jnp.mean(leaf, axis=0)))
+
+
+def test_normalized_client_mean_is_dot_general_bitwise():
+    tree = _stacked(8)
+    w = _weights()
+    denom = jnp.sum(w.astype(jnp.float32)) + 1e-12
+    got = normalized_client_mean(tree, w)
+    for leaf, out in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        oracle = jax.lax.dot_general(
+            w.astype(jnp.float32), leaf.astype(jnp.float32),
+            dimension_numbers=(((0,), (0,)), ((), ()))) / denom
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+# ------------------------------------------------------- backend auto (S3)
+
+def test_hw_auto_rule_consistent_with_backend():
+    tpu = jax.default_backend() == "tpu"
+    assert hw.on_tpu() == tpu
+    assert hw.default_use_pallas() == tpu
+    assert hw.default_interpret() == (not tpu)
+    assert hw.resolve_use_pallas(None) == tpu
+    assert hw.resolve_interpret(None) == (not tpu)
+    # explicit booleans always pass through
+    assert hw.resolve_use_pallas(True) is True
+    assert hw.resolve_use_pallas(False) is False
+    assert hw.resolve_interpret(True) is True
+    assert hw.resolve_interpret(False) is False
+
+
+def test_transport_config_defaults_follow_auto_rule():
+    cfg = TransportConfig()
+    assert cfg.use_pallas == hw.default_use_pallas()
+    assert cfg.interpret == hw.default_interpret()
+    qb = resolve_codec("qblock")
+    assert qb.use_pallas == hw.default_use_pallas()
+    assert qb.interpret == hw.default_interpret()
+
+
+# ------------------------------------------------- wire_dtype properties
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+@pytest.mark.parametrize("wire_dtype", ["f32", "bf16"])
+@pytest.mark.parametrize("leaf_dtype", [jnp.float32, jnp.bfloat16])
+def test_codec_roundtrip_preserves_shape_dtype_under_vmap(name, wire_dtype,
+                                                          leaf_dtype):
+    cfg = TransportConfig(rank=4, use_pallas=False, wire_dtype=wire_dtype)
+    codec = resolve_codec(name, cfg)
+    stacked = _stacked(5, dtype=leaf_dtype)
+    out = jax.vmap(codec.decode)(jax.vmap(codec.encode)(stacked))
+    for src, dec in zip(jax.tree.leaves(stacked), jax.tree.leaves(out)):
+        assert dec.shape == src.shape
+        assert dec.dtype == src.dtype
+
+
+def test_bf16_wire_halves_floating_payload_bytes():
+    tree = {"L": jnp.zeros((64, 48), jnp.float32)}
+    f32 = wire_bytes(Dense().encode(tree))
+    bf16 = wire_bytes(Dense(wire_dtype="bf16").encode(tree))
+    assert bf16 * 2 == f32
+    lr32 = resolve_codec("lowrank_svd", TransportConfig(rank=4))
+    lr16 = resolve_codec("lowrank_svd",
+                         TransportConfig(rank=4, wire_dtype="bf16"))
+    assert wire_bytes(lr16.encode(tree)) * 2 == wire_bytes(lr32.encode(tree))
+    # qblock is int8 + f32 scales either way
+    qb32 = resolve_codec("qblock", TransportConfig(use_pallas=False))
+    qb16 = resolve_codec("qblock", TransportConfig(use_pallas=False,
+                                                   wire_dtype="bf16"))
+    assert wire_bytes(qb32.encode(tree)) == wire_bytes(qb16.encode(tree))
+
+
+def test_bf16_dense_is_lossy_and_activates_error_feedback():
+    assert Dense().lossless
+    lossy = Dense(wire_dtype="bf16")
+    assert not lossy.lossless
+    assert Transport(lossy, Dense()).feedback_active
+    # EF composes with the bf16 wire: residual carries the rounding error
+    delta = {"w": jax.random.normal(KEY, (10, 9))}
+    res0 = jax.tree.map(jnp.zeros_like, delta)
+    msg, dec, res1 = encode_with_feedback(lossy, delta, res0)
+    assert msg.leaves[0].parts["x"].dtype == jnp.bfloat16
+    assert res1["w"].dtype == jnp.float32
+    assert float(jnp.max(jnp.abs(res1["w"]))) > 0.0
+    np.testing.assert_allclose(np.asarray(res1["w"]),
+                               np.asarray(delta["w"] - dec["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_wire_dtype_validated_eagerly():
+    with pytest.raises(ValueError, match="wire_dtype"):
+        TransportConfig(wire_dtype="f16")
+    with pytest.raises(ValueError, match="wire_dtype"):
+        Dense(wire_dtype="f64")
+    from repro.fed import FedConfig
+    with pytest.raises(ValueError, match="wire_dtype"):
+        FedConfig(wire_dtype="int4")
+
+
+def test_fedconfig_wire_dtype_reaches_transport():
+    from repro.core.algorithms import resolve
+    from repro.fed import FedConfig
+    fed = FedConfig(algorithm="fedpac_soap", wire_dtype="bf16")
+    tp = fed.make_transport(resolve("fedpac_soap"))
+    assert not tp.theta.lossless
+    msg = tp.theta.encode({"w": jnp.zeros((8, 8), jnp.float32)})
+    assert msg.leaves[0].parts["x"].dtype == jnp.bfloat16

@@ -214,6 +214,10 @@ def test_transport_round_bytes_matches_run_metric():
                                    client_batch_fn=batch_fn, fed=fed, **kw)
             hist = exp.run()
             assert hist[-1]["upload_bytes"] == exp.comm_bytes_per_round()
+            # exact-total accounting: the untruncated cohort sum rides
+            # along (regression for the old up_bytes // b truncation)
+            assert hist[-1]["upload_total_bytes"] == \
+                hist[-1]["cohort_size"] * exp.comm_bytes_per_round()
 
 
 # ------------------------------------------------ dense bitwise equivalence
