@@ -9,10 +9,20 @@ vision problem — the speed/scale trade-off behind
              on multi-device meshes; on one CPU device it measures the
              shard_map overhead floor);
   chunked    bounded peak memory, wall clock ~ S/chunk_size sequential
-             steps — the only backend that runs when S outgrows the device.
+             steps — the only backend that runs when S outgrows the device;
+  sharded    shard_map across the mesh x chunked within each shard — the
+             population-scale path (10k+ cohorts with cohort-proportional
+             peak memory).
 
-Emits ``exec_<backend>_S<cohort>`` rows (us per round) and returns them in
-the structured ``BENCH_executor.json`` row schema
+The population sweep (``pop_P<population>_S<cohort>`` rows) runs the same
+round over a streamed 10^6-id population: lazy ``stream_dirichlet``
+partition, sparse LRU client-state store, and the ``sharded`` executor.
+Each row records peak resident client-state entries against the configured
+budget — the benchmark *fails* if the store ever exceeds it, so CI's quick
+mode doubles as the memory-bound regression check.
+
+Emits ``exec_*`` / ``pop_*`` rows (us per round) and returns them in the
+structured ``BENCH_executor.json`` row schema
 (``{"name", "us_per_call", "derived": {...}}`` — see ``repro.obs.bench``).
 """
 from __future__ import annotations
@@ -25,7 +35,7 @@ import jax
 from repro.api import build_experiment
 from repro.core.engine import ExecutorConfig
 from repro.fed import FedConfig
-from repro.scenarios import cifar_like, materialize
+from repro.scenarios import PartitionSpec, cifar_like, materialize
 from benchmarks.common import emit
 
 BACKEND_CFGS = {
@@ -33,6 +43,8 @@ BACKEND_CFGS = {
     "shard_map": dict(executor="shard_map"),
     "chunked": dict(executor="chunked", chunk_size=4),
 }
+
+POPULATION = 1_000_000
 
 
 def _time_round(exp, iters=3):
@@ -42,6 +54,53 @@ def _time_round(exp, iters=3):
         exp.run_round()
     jax.block_until_ready(exp.server.params)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _pop_rows(quick: bool):
+    """Streamed-population sweep: 1M ids, sharded executor, sparse state.
+
+    Cohort sizes are the scale axis; ``state_budget = 1.5 x cohort`` keeps
+    peak client-state memory cohort-proportional while forcing LRU
+    eviction + spill across rounds (fresh cohorts each round from a
+    10^6-id space are disjoint with near-certainty, so two rounds overflow
+    the budget by half a cohort).
+    """
+    import tempfile
+
+    cohorts = [256] if quick else [256, 1024, 10_000]
+    spec = cifar_like(
+        model="cnn", n=600, image_size=8, n_classes=4, batch=8,
+        n_clients=POPULATION, name="exec_pop",
+        partition=PartitionSpec("stream_dirichlet", alpha=0.3,
+                                samples_per_client=32))
+    scn = materialize(spec, seed=0, n_clients=POPULATION)
+    rows = []
+    for s in cohorts:
+        budget = (3 * s) // 2
+        with tempfile.TemporaryDirectory(prefix="bench_spill_") as spill:
+            exp = build_experiment(
+                "scaffold", scenario=scn, rounds=4, local_steps=2,
+                population_size=POPULATION, cohort_size=s,
+                state_budget=budget, spill_dir=spill, seed=0,
+                executor="sharded", chunk_size=min(64, s))
+            us = _time_round(exp, iters=1)
+            rec = exp.history[-1]
+        loss = float(rec["loss"])
+        peak = int(rec["state_peak"])
+        spills, restores = int(rec["state_spills"]), int(rec["state_restores"])
+        if peak > budget:
+            raise RuntimeError(
+                f"population sweep S={s}: peak client-state entries {peak} "
+                f"exceeded state_budget={budget} — the sparse store leaked")
+        emit(f"pop_P{POPULATION}_S{s}", us,
+             f"peak={peak}/{budget} spills={spills} loss={loss:.4f}")
+        rows.append({
+            "name": f"pop_P{POPULATION}_S{s}", "us_per_call": us,
+            "derived": {"backend": "sharded", "population": POPULATION,
+                        "cohort": s, "state_budget": budget,
+                        "peak_state_entries": peak, "spills": spills,
+                        "restores": restores, "loss": loss}})
+    return rows
 
 
 def run(quick: bool = True):
@@ -75,6 +134,7 @@ def run(quick: bool = True):
         emit(f"exec_agree_S{s}", 0.0, f"max_dev={dev:.2e}")
         rows.append({"name": f"exec_agree_S{s}", "us_per_call": 0.0,
                      "derived": {"cohort": s, "max_dev": dev}})
+    rows.extend(_pop_rows(quick))
     return rows
 
 

@@ -66,6 +66,7 @@ def build_experiment(
     opt_kwargs: Optional[dict] = None,
     async_cfg: Optional[AsyncConfig] = None,
     fed: Optional[FedConfig] = None,
+    population=None,
     **fed_overrides,
 ) -> FedExperiment:
     """Build the right runtime for ``algorithm`` on ``scenario`` (or on an
@@ -90,6 +91,13 @@ def build_experiment(
     async_cfg: execution-model knobs; implies ``runtime="async"`` when no
       config was passed at all — an explicit ``fed`` config or ``runtime``
       override is authoritative, and a sync one + async_cfg is an error.
+    population: optional ``repro.fed.population.ClientPopulation`` carrying
+      a weighted/availability cohort sampler; requires the config's
+      population knobs (``population_size``/``cohort_size``).  With
+      ``population_size`` set but no object passed, the uniform streaming
+      population is built from the config.  In population mode a scenario
+      is materialized over the *id space* (``population_size`` clients) —
+      use a lazy partition kind (``stream_dirichlet``) at 10^5+ ids.
 
     The materialized bundle is exposed as ``exp.scenario`` (None on the
     explicit path), including ``partition_stats`` for sweep reporting.
@@ -120,14 +128,19 @@ def build_experiment(
                          "scenario=")
 
     cfg = dataclasses.replace(base, **changes)
+    # population mode: the scenario's client axis is the abstract id space,
+    # so data partitioning spans population_size ids (sampled cohorts pull
+    # their slices on demand)
+    id_space = (cfg.population_size if cfg.population_active
+                else cfg.n_clients)
 
     if scenario is not None:
         if premade:
-            if scenario.n_clients != cfg.n_clients:
+            if scenario.n_clients != id_space:
                 raise ValueError(
                     f"pre-materialized scenario {scenario.spec.name!r} was "
                     f"built for n_clients={scenario.n_clients} but the "
-                    f"config says {cfg.n_clients} — re-materialize or drop "
+                    f"config wants {id_space} — re-materialize or drop "
                     "the override")
             if scenario_seed is not None and scenario_seed != scenario.seed:
                 raise ValueError(
@@ -137,7 +150,7 @@ def build_experiment(
             scn = scenario
         else:
             seed = scenario_seed if scenario_seed is not None else cfg.seed
-            scn = materialize(scenario, seed=seed, n_clients=cfg.n_clients)
+            scn = materialize(scenario, seed=seed, n_clients=id_space)
         params, loss_fn, client_batch_fn, eval_fn = scn.problem()
     elif params is None or loss_fn is None or client_batch_fn is None:
         raise TypeError(
@@ -150,10 +163,12 @@ def build_experiment(
                 "async_cfg given but the config says runtime='sync' — set "
                 "runtime='async' (or drop the async_cfg)")
         exp = FederatedExperiment(cfg, params, loss_fn, client_batch_fn,
-                                  eval_fn, opt_kwargs, spec=spec)
+                                  eval_fn, opt_kwargs, spec=spec,
+                                  population=population)
     else:
         exp = AsyncFederatedExperiment(cfg, params, loss_fn, client_batch_fn,
                                        eval_fn, opt_kwargs,
-                                       async_cfg=async_cfg, spec=spec)
+                                       async_cfg=async_cfg, spec=spec,
+                                       population=population)
     exp.scenario = scn
     return exp

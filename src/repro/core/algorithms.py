@@ -32,6 +32,7 @@ from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import optim
 from repro.core.client import LocalRunConfig, client_round
@@ -70,10 +71,28 @@ class ClientStateSpec:
 
     ``outs`` is the cohort-stacked third element of the local update's
     return value (None for stateless algorithms).
+
+    ``client_export``/``client_import`` are the sparse-population spill
+    hooks: export one client's *private row* out of the stacked state /
+    graft a row back in.  They default to the generic stacked-leaf slice
+    (``leaf[cid]`` / ``leaf.at[cid].set(row)``), which is correct whenever
+    every leaf carries the leading (N,) client axis (error-feedback
+    residuals do).  States that mix per-client rows with shared globals
+    (SCAFFOLD's ``c_global``) must override them so only the private part
+    travels to the checkpoint store — use the module helpers
+    ``state_export``/``state_import`` rather than calling these directly.
     """
     init: Callable[[Any, int], Any]
     client_view: Callable[[Any, Any], Any]
     server_update: Callable[[Any, Any, Any, int], Any]
+    client_export: Optional[Callable[[Any, int], Any]] = None
+    client_import: Optional[Callable[[Any, int, Any], Any]] = None
+    # batched import: graft many rows (stacked along a leading axis aligned
+    # with the id array) in ONE scatter.  Functional per-client .at[].set
+    # copies the whole stacked state each call — O(cohort x budget) per
+    # acquire — so the population store always imports through
+    # ``state_import_many``; override this alongside ``client_import``
+    client_import_many: Optional[Callable[[Any, Any, Any], Any]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -264,6 +283,45 @@ def make_local_update(spec: AlgorithmSpec, loss_fn: Callable,
     return local_fn
 
 
+def state_export(proto: ClientStateSpec, state, cid):
+    """One client's private state row (the unit the sparse population store
+    spills to the checkpoint store).  Generic stacked-leaf slice unless the
+    spec overrides ``client_export``."""
+    if proto.client_export is not None:
+        return proto.client_export(state, cid)
+    return jax.tree.map(lambda x: x[cid], state)
+
+
+def state_import(proto: ClientStateSpec, state, cid, row):
+    """Graft a private row (from ``state_export`` or a spill file) back into
+    the stacked state at ``cid``."""
+    if proto.client_import is not None:
+        return proto.client_import(state, cid, row)
+    return jax.tree.map(lambda x, r: x.at[cid].set(r), state, row)
+
+
+def state_import_many(proto: ClientStateSpec, state, cids, rows):
+    """Graft many private rows in one scatter (``rows`` stacked along a
+    leading axis aligned with ``cids``).
+
+    This is the population store's import path: a single functional
+    ``.at[ids].set`` costs one full-state copy total, where per-client
+    ``state_import`` would copy the whole stacked state once *per client*
+    (O(cohort x budget) — quadratic in the cohort when the budget tracks
+    it).  Values are identical to sequential imports at distinct ids.
+    Specs that override ``client_import`` without a batched variant fall
+    back to the sequential path."""
+    if proto.client_import_many is not None:
+        return proto.client_import_many(state, cids, rows)
+    if proto.client_import is not None:
+        for i, cid in enumerate(np.asarray(cids)):
+            state = proto.client_import(
+                state, int(cid), jax.tree.map(lambda x: x[i], rows))
+        return state
+    ids = jnp.asarray(np.asarray(cids))
+    return jax.tree.map(lambda x, r: x.at[ids].set(r), state, rows)
+
+
 # error-feedback residuals, declared through the same per-client state
 # protocol as algorithm state (SCAFFOLD's variates): the engine gathers the
 # cohort's residuals inside jit and scatters the refreshed ones back.
@@ -282,7 +340,15 @@ def _compose_state_specs(algo: ClientStateSpec,
                                     ef.client_view(s[1], cid)),
         server_update=lambda s, cohort, outs, n: (
             algo.server_update(s[0], cohort, outs[0], n),
-            ef.server_update(s[1], cohort, outs[1], n)))
+            ef.server_update(s[1], cohort, outs[1], n)),
+        client_export=lambda s, cid: (state_export(algo, s[0], cid),
+                                      state_export(ef, s[1], cid)),
+        client_import=lambda s, cid, row: (
+            state_import(algo, s[0], cid, row[0]),
+            state_import(ef, s[1], cid, row[1])),
+        client_import_many=lambda s, cids, rows: (
+            state_import_many(algo, s[0], cids, rows[0]),
+            state_import_many(ef, s[1], cids, rows[1])))
 
 
 def round_client_state_spec(spec: AlgorithmSpec,
@@ -381,7 +447,15 @@ def build_round_fn(
 
     def round_fn(params, theta, g_global, ctrl, cstate, cohort, batches, rng):
         s = jax.tree.leaves(batches)[0].shape[0]
-        keys = jax.random.split(rng, s)
+        # rng is either one round key (legacy: split S ways) or an already
+        # stacked (S,) vector of per-client fold_in-derived keys (population
+        # runs, where a client's stream must not depend on cohort makeup).
+        # Typed keys make this a static trace-time branch: scalar key
+        # ndim == 0, stacked ndim == 1.
+        if jnp.issubdtype(rng.dtype, jax.dtypes.prng_key) and rng.ndim == 1:
+            keys = rng
+        else:
+            keys = jax.random.split(rng, s)
 
         def one_client(cid, batch_i, key_i):
             view = (state_proto.client_view(cstate, cid)

@@ -13,10 +13,16 @@ arg carries a leading (S,) client axis.  Three backends:
              all-reduces;
   chunked    sequential ``lax.map`` over cohort chunks of ``chunk_size``,
              so cohorts larger than device memory still run (peak memory
-             scales with the chunk, wall clock with S/chunk_size).
+             scales with the chunk, wall clock with S/chunk_size);
+  sharded    shard_map over the mesh *with the chunked body inside each
+             shard*: the population-scale path. A 10k cohort splits S/n
+             ways across device groups and each group scans its slice in
+             ``chunk_size`` pieces, so peak memory per device is
+             chunk-proportional while throughput still scales with the
+             mesh.
 
-All three produce numerically equivalent stacked outputs (tested); pick by
-cohort size vs device budget — ``benchmarks/executor_scaling.py`` sweeps
+All backends produce numerically equivalent stacked outputs (tested); pick
+by cohort size vs device budget — ``benchmarks/executor_scaling.py`` sweeps
 the trade-off.
 """
 from __future__ import annotations
@@ -29,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 
-BACKENDS = ("vmap", "shard_map", "chunked")
+BACKENDS = ("vmap", "shard_map", "chunked", "sharded")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +62,51 @@ def _default_mesh():
     return jax.make_mesh((len(jax.devices()),), ("data",))
 
 
+def _chunked_run(one_client, chunk_size: int, *args):
+    """Bounded-memory sequential ``lax.map`` over cohort slices: full chunks
+    scan through one compiled body, a remainder tail vmaps separately."""
+    s = _leading_dim(args)
+    c = min(chunk_size, s)
+    n_full = s // c
+    parts = []
+    if n_full:
+        head = jax.tree.map(
+            lambda x: x[: n_full * c].reshape(n_full, c, *x.shape[1:]),
+            args)
+        out = jax.lax.map(lambda a: jax.vmap(one_client)(*a), head)
+        parts.append(jax.tree.map(
+            lambda x: x.reshape(n_full * c, *x.shape[2:]), out))
+    if s - n_full * c:
+        tail = jax.tree.map(lambda x: x[n_full * c:], args)
+        parts.append(jax.vmap(one_client)(*tail))
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(
+        lambda a, b: jnp.concatenate([a, b], axis=0), *parts)
+
+
+def _make_shard_runner(cfg: ExecutorConfig, shard_body_of):
+    """shard_map plumbing shared by the ``shard_map`` and ``sharded``
+    backends; ``shard_body_of(one_client)`` is what runs on each device
+    group's slice of the client axis."""
+    from repro.sharding.partitioning import client_axis_spec
+
+    def run(one_client, *args):
+        mesh = cfg.mesh if cfg.mesh is not None else _default_mesh()
+        axes, spec = client_axis_spec(mesh, preferred=cfg.client_axes)
+        n = math.prod(mesh.shape[a] for a in axes)
+        s = _leading_dim(args)
+        if s % n != 0:
+            raise ValueError(
+                f"cohort size {s} not divisible by the client-axis "
+                f"extent {n} (mesh axes {axes}) — pad the cohort or "
+                f"use the 'chunked' executor")
+        return shard_map(shard_body_of(one_client), mesh=mesh,
+                         in_specs=(spec,) * len(args), out_specs=spec,
+                         check_rep=False)(*args)
+    return run
+
+
 def make_cohort_executor(cfg: Optional[ExecutorConfig] = None):
     cfg = cfg or ExecutorConfig()
 
@@ -65,45 +116,17 @@ def make_cohort_executor(cfg: Optional[ExecutorConfig] = None):
         return run
 
     if cfg.backend == "shard_map":
-        from repro.sharding.partitioning import client_axis_spec
+        return _make_shard_runner(
+            cfg, lambda one_client: lambda *a: jax.vmap(one_client)(*a))
 
-        def run(one_client, *args):
-            mesh = cfg.mesh if cfg.mesh is not None else _default_mesh()
-            axes, spec = client_axis_spec(mesh, preferred=cfg.client_axes)
-            n = math.prod(mesh.shape[a] for a in axes)
-            s = _leading_dim(args)
-            if s % n != 0:
-                raise ValueError(
-                    f"cohort size {s} not divisible by the client-axis "
-                    f"extent {n} (mesh axes {axes}) — pad the cohort or "
-                    f"use the 'chunked' executor")
-
-            def shard_body(*shard_args):
-                return jax.vmap(one_client)(*shard_args)
-
-            return shard_map(shard_body, mesh=mesh,
-                             in_specs=(spec,) * len(args), out_specs=spec,
-                             check_rep=False)(*args)
-        return run
+    if cfg.backend == "sharded":
+        # population-scale path: each device group scans its cohort slice in
+        # chunk_size pieces — peak memory ~ chunk, throughput ~ mesh
+        return _make_shard_runner(
+            cfg, lambda one_client:
+            lambda *a: _chunked_run(one_client, cfg.chunk_size, *a))
 
     # chunked: bounded-memory sequential scan over cohort slices
     def run(one_client, *args):
-        s = _leading_dim(args)
-        c = min(cfg.chunk_size, s)
-        n_full = s // c
-        parts = []
-        if n_full:
-            head = jax.tree.map(
-                lambda x: x[: n_full * c].reshape(n_full, c, *x.shape[1:]),
-                args)
-            out = jax.lax.map(lambda a: jax.vmap(one_client)(*a), head)
-            parts.append(jax.tree.map(
-                lambda x: x.reshape(n_full * c, *x.shape[2:]), out))
-        if s - n_full * c:
-            tail = jax.tree.map(lambda x: x[n_full * c:], args)
-            parts.append(jax.vmap(one_client)(*tail))
-        if len(parts) == 1:
-            return parts[0]
-        return jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=0), *parts)
+        return _chunked_run(one_client, cfg.chunk_size, *args)
     return run

@@ -22,6 +22,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.algorithms import AlgorithmSpec, ClientStateSpec, register
 
@@ -44,6 +45,26 @@ class ScaffoldState:
 def _client_view(state: ScaffoldState, cid):
     """One client's read: the global control + its own variate."""
     return state.c_global, jax.tree.map(lambda c: c[cid], state.c_clients)
+
+
+def _client_export(state: ScaffoldState, cid):
+    """Spill hook: only the client's own variate is private state.
+    ``c_global`` is server-owned and stays resident in the store."""
+    return jax.tree.map(lambda c: c[cid], state.c_clients)
+
+
+def _client_import(state: ScaffoldState, cid, row):
+    return ScaffoldState(
+        state.c_global,
+        jax.tree.map(lambda c, r: c.at[cid].set(r), state.c_clients, row))
+
+
+def _client_import_many(state: ScaffoldState, cids, rows):
+    """Batched graft: one scatter into c_clients for a whole cohort."""
+    ids = jnp.asarray(np.asarray(cids))
+    return ScaffoldState(
+        state.c_global,
+        jax.tree.map(lambda c, r: c.at[ids].set(r), state.c_clients, rows))
 
 
 def _server_update(state: ScaffoldState, cohort, outs, n_clients: int):
@@ -97,7 +118,10 @@ SCAFFOLD_SPEC = register(AlgorithmSpec(
     local_update=make_scaffold_local_update,
     client_state=ClientStateSpec(init=ScaffoldState.init,
                                  client_view=_client_view,
-                                 server_update=_server_update),
+                                 server_update=_server_update,
+                                 client_export=_client_export,
+                                 client_import=_client_import,
+                                 client_import_many=_client_import_many),
     # historical default: the legacy parser's "scaffold" token bypassed the
     # SGD table lr (0.1) and fell back to 1e-2 — kept to preserve numerics
     default_lr=1e-2,

@@ -1,6 +1,7 @@
 from repro.data.partition import (
-    dirichlet_partition, heterogeneity_stat, iid_partition, partition_stats,
-    quantity_partition, shard_partition,
+    ClientIndexMap, dirichlet_partition, heterogeneity_stat, iid_partition,
+    partition_stats, quantity_partition, shard_partition,
+    stream_dirichlet_indices, stream_dirichlet_map,
 )
 from repro.data.synth import (
     lm_batches, make_image_classification, make_lm_corpus,

@@ -10,14 +10,28 @@ The scenario API (``repro.scenarios.PartitionSpec``) additionally exposes
 * ``quantity_partition`` — label-IID but Dirichlet-skewed client sizes;
 * ``iid_partition``      — uniform random split (the control condition).
 
-All partitioners return a list of ``n_clients`` index arrays covering every
-sample exactly once, and are deterministic in ``seed``.
+All classic partitioners return a list of ``n_clients`` index arrays
+covering every sample exactly once, and are deterministic in ``seed``.
+
+Population scale adds a *lazy* form: ``ClientIndexMap`` maps a client id to
+its sample indices on demand (nothing is enumerated up front), and
+``stream_dirichlet_map`` derives each client's Dirichlet label mixture from
+``SeedSequence((seed, client_id))`` alone — a 10^6-client partition costs
+O(1) until a client is actually sampled, and a client's data is invariant
+to the population size around it.  Streamed clients draw *views* of the
+sample pool (with replacement), so the exactly-once covering property is
+deliberately relaxed: it cannot hold with more clients than samples.
 """
 from __future__ import annotations
 
 import warnings
+from collections import OrderedDict
+from typing import Callable
 
 import numpy as np
+
+# domain-separation tag for streamed per-client partition draws
+_STREAM_TAG = 0x5D1B
 
 
 def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
@@ -147,7 +161,13 @@ def heterogeneity_stat(parts, labels, n_classes=None) -> float:
 
 
 def partition_stats(parts, labels=None) -> dict:
-    """Summary of one partition: sizes and (with labels) label-skew TV."""
+    """Summary of one partition: sizes and (with labels) label-skew TV.
+
+    Accepts either an eager list of index arrays or a ``ClientIndexMap``
+    (which is probed, not enumerated — see ``ClientIndexMap.sample_stats``).
+    """
+    if isinstance(parts, ClientIndexMap):
+        return parts.sample_stats(labels)
     sizes = [int(len(p)) for p in parts]
     stats = {"n_clients": len(parts), "n_samples": int(sum(sizes)),
              "min_size": min(sizes), "max_size": max(sizes),
@@ -155,3 +175,112 @@ def partition_stats(parts, labels=None) -> dict:
     if labels is not None:
         stats["label_tv"] = heterogeneity_stat(parts, labels)
     return stats
+
+
+class ClientIndexMap:
+    """Lazy client-id -> sample-index mapping.
+
+    The population path replaces eager per-client index lists with this map:
+    ``map[client_id]`` derives that client's indices on demand from a pure
+    function of the id, so a million-client partition allocates nothing
+    until a client is actually staged.  A small LRU cache keeps hot clients
+    (the current cohort) free to re-query.
+
+    The derivation function must be deterministic in ``client_id`` — the
+    same id always yields the same indices, independent of query order.
+    """
+
+    def __init__(self, n_clients: int, fn: Callable[[int], np.ndarray],
+                 cache_size: int = 4096):
+        if n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1, got {n_clients}")
+        self.n_clients = int(n_clients)
+        self._fn = fn
+        self._cache: OrderedDict[int, np.ndarray] = OrderedDict()
+        self._cache_size = int(cache_size)
+
+    def __len__(self) -> int:
+        return self.n_clients
+
+    def __getitem__(self, client_id) -> np.ndarray:
+        cid = int(client_id)
+        if not 0 <= cid < self.n_clients:
+            raise IndexError(
+                f"client id {cid} outside id space [0, {self.n_clients})")
+        hit = self._cache.get(cid)
+        if hit is not None:
+            self._cache.move_to_end(cid)
+            return hit
+        idx = np.asarray(self._fn(cid), dtype=np.int64)
+        self._cache[cid] = idx
+        if len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
+        return idx
+
+    client_indices = __getitem__
+
+    def sample_stats(self, labels=None, probe: int = 64) -> dict:
+        """Partition stats from a deterministic probe of ``probe`` clients.
+
+        Enumerating a streamed population is the anti-pattern this class
+        exists to avoid, so stats are estimated from evenly spaced ids and
+        flagged ``lazy: True`` with the probe count alongside.
+        """
+        ids = np.unique(np.linspace(
+            0, self.n_clients - 1, min(probe, self.n_clients)).astype(int))
+        parts = [self[c] for c in ids]
+        stats = partition_stats(parts, labels)
+        stats.update(n_clients=self.n_clients, lazy=True,
+                     probed_clients=int(len(ids)))
+        return stats
+
+
+def stream_dirichlet_indices(class_indices, client_id: int, alpha: float,
+                             samples_per_client: int, seed: int = 0):
+    """One streamed client's sample indices, derived from the id alone.
+
+    ``SeedSequence((seed, _STREAM_TAG, client_id))`` seeds the draw, so the
+    result is invariant to population size and query order: the client draws
+    a Dirichlet(alpha) label mixture, splits ``samples_per_client`` across
+    classes multinomially, and picks that many indices per class with
+    replacement (clients view the pool; they do not own disjoint slices).
+    """
+    rng = np.random.default_rng(
+        np.random.SeedSequence((seed, _STREAM_TAG, int(client_id))))
+    n_classes = len(class_indices)
+    props = rng.dirichlet(np.full(n_classes, alpha))
+    counts = rng.multinomial(samples_per_client, props)
+    picks = [rng.choice(class_indices[c], size=int(k), replace=True)
+             for c, k in enumerate(counts) if k > 0]
+    idx = np.concatenate(picks) if picks else np.empty(0, np.int64)
+    rng.shuffle(idx)
+    return idx
+
+
+def stream_dirichlet_map(labels: np.ndarray, n_clients: int, alpha: float,
+                         samples_per_client: int = 64,
+                         seed: int = 0) -> ClientIndexMap:
+    """Lazy Dirichlet label-skew partition over an arbitrary id space.
+
+    The classic ``dirichlet_partition`` enumerates every client up front;
+    this map is its population-scale analog — per-class index pools are
+    built once (O(n_samples)), and each client's slice is derived on demand
+    by ``stream_dirichlet_indices``.
+    """
+    if alpha <= 0:
+        raise ValueError(f"alpha must be > 0, got {alpha}")
+    if samples_per_client < 1:
+        raise ValueError(
+            f"samples_per_client must be >= 1, got {samples_per_client}")
+    labels = np.asarray(labels)
+    n_classes = int(labels.max()) + 1
+    class_indices = [np.where(labels == c)[0] for c in range(n_classes)]
+    empty = [c for c, ix in enumerate(class_indices) if len(ix) == 0]
+    if empty:
+        raise ValueError(
+            f"stream_dirichlet_map needs every class populated; classes "
+            f"{empty} have no samples")
+    return ClientIndexMap(
+        n_clients,
+        lambda cid: stream_dirichlet_indices(
+            class_indices, cid, alpha, samples_per_client, seed))

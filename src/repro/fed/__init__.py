@@ -8,3 +8,8 @@ from repro.fed.staging import stage_client_batches, stage_cohort_batches
 from repro.fed.async_runtime import (
     AsyncConfig, AsyncFederatedExperiment, LatencyModel,
 )
+from repro.fed.population import (
+    AvailabilitySampler, ClientPopulation, ClientStateStore,
+    DenseClientStore, UniformSampler, WeightedSampler, make_client_store,
+    make_population, stage_population_batches,
+)

@@ -51,8 +51,11 @@ class AsyncFederatedExperiment(FedExperiment):
                  client_batch_fn: Callable, eval_fn: Optional[Callable] = None,
                  opt_kwargs: Optional[dict] = None,
                  async_cfg: Optional[AsyncConfig] = None,
-                 spec: Optional[AlgorithmSpec] = None):
+                 spec: Optional[AlgorithmSpec] = None,
+                 population: Optional[object] = None):
         super().__init__(fed)
+        from repro.fed.population import resolve_population
+        self.population = resolve_population(fed, population)
         self.spec = resolve(spec if spec is not None else fed.algorithm)
         if self.spec.client_state is not None:
             raise ValueError(
@@ -108,9 +111,19 @@ class AsyncFederatedExperiment(FedExperiment):
         # lock-step: it reads/writes it when *it* trains).  The scatter is
         # jitted with the stacked state donated so updating one client's
         # row is an in-place dynamic-update-slice, not an O(N x |params|)
-        # copy per dispatch.
-        self._ef_state = (EF_STATE.init(params, fed.n_clients)
-                          if self._ef else None)
+        # copy per dispatch.  In population mode the residuals live in the
+        # budgeted sparse store (cold rows spill through the checkpoint
+        # store) and the jitted gather/scatter address *slots*; the store
+        # maps global ids to slots per dispatch.
+        self._ef_store = None
+        self._ef_state = None
+        if self._ef and self.population is not None:
+            from repro.fed.population import make_client_store
+            self._ef_store = make_client_store(
+                EF_STATE, params, fed.population_size,
+                budget=fed.resolve_state_budget(), spill_dir=fed.spill_dir)
+        elif self._ef:
+            self._ef_state = EF_STATE.init(params, fed.n_clients)
         if self._ef:
             self._ef_scatter = jax.jit(
                 lambda s, cid, u: EF_STATE.server_update(
@@ -130,10 +143,24 @@ class AsyncFederatedExperiment(FedExperiment):
 
         self.server = init_server(params, self.opt, geom=ctrl)
         self._theta0 = zero_theta(self.opt, params) if self.align else None
-        concurrency = self.acfg.resolve_concurrency(fed.n_clients,
-                                                    fed.participation)
+        if self.population is not None:
+            # participation fractions don't scale to 10^6-id spaces: the
+            # in-flight pool sizes from cohort_size (or the explicit knob)
+            concurrency = self.acfg.concurrency
+            if concurrency is None:
+                concurrency = max(self.acfg.buffer_size, fed.cohort_size)
+            concurrency = max(1, min(concurrency, self.population.size))
+            if self.acfg.buffer_size > concurrency:
+                raise ValueError(
+                    f"buffer_size={self.acfg.buffer_size} exceeds the "
+                    f"population-mode concurrency {concurrency} — raise "
+                    "AsyncConfig.concurrency or cohort_size")
+        else:
+            concurrency = self.acfg.resolve_concurrency(fed.n_clients,
+                                                        fed.participation)
         self.scheduler = SimScheduler(self.acfg.latency, fed.n_clients,
-                                      concurrency, seed=fed.seed)
+                                      concurrency, seed=fed.seed,
+                                      population=self.population)
         # batches/keys draw from a separate stream so the simulated event
         # order is invariant to how many batch samples a client consumes.
         self.rng = np.random.default_rng(fed.seed + 1)
@@ -147,16 +174,36 @@ class AsyncFederatedExperiment(FedExperiment):
 
         The payload holds *wire messages* — delta (error-compensated for
         lossy codecs) and, for aligned algorithms, Theta — exactly what
-        the client would put on the network."""
+        the client would put on the network.  ``cid`` is a stable global
+        id in population mode; its batches and PRNG key derive from
+        ``fold_in(seed, cid)`` salted by the client's own dispatch count,
+        and its EF residual row is addressed through the sparse store."""
         t = self.tracer
+        pop = self.population
         with t.span("staging", client_id=cid, sim_time=self.scheduler.now):
-            batches = stage_client_batches(self.client_batch_fn, cid,
-                                           self.fed.local_steps, self.rng)
-            key = jax.random.key(int(self.rng.integers(0, 2**31)))
+            if pop is not None:
+                from repro.fed.population import (
+                    stage_client_population_batches,
+                )
+                salt = self.scheduler.dispatch_salt(cid)
+                batches = stage_client_population_batches(
+                    self.client_batch_fn, pop, cid, self.fed.local_steps,
+                    salt=salt)
+                key = pop.client_key(cid, salt=salt)
+            else:
+                batches = stage_client_batches(self.client_batch_fn, cid,
+                                               self.fed.local_steps, self.rng)
+                key = jax.random.key(int(self.rng.integers(0, 2**31)))
         theta = self.server.theta if self.server.theta is not None \
             else self._theta0
-        residual = EF_STATE.client_view(self._ef_state, cid) if self._ef \
-            else None
+        slot = cid
+        if self._ef_store is not None:
+            slot = int(self._ef_store.acquire([cid])[0])
+            residual = EF_STATE.client_view(self._ef_store.state, slot)
+        elif self._ef:
+            residual = EF_STATE.client_view(self._ef_state, cid)
+        else:
+            residual = None
         with t.span("local_update", client_id=cid,
                     sim_time=self.scheduler.now):
             dmsg, tmsg, new_residual, loss = self._local_fn(
@@ -164,7 +211,10 @@ class AsyncFederatedExperiment(FedExperiment):
                 self.server.geom.beta, residual)
             if t.enabled:
                 jax.block_until_ready(loss)
-        if self._ef:
+        if self._ef_store is not None:
+            self._ef_store.state = self._ef_scatter(
+                self._ef_store.state, jnp.asarray(slot), new_residual)
+        elif self._ef:
             self._ef_state = self._ef_scatter(
                 self._ef_state, jnp.asarray(cid), new_residual)
         return {"delta": dmsg, "theta": tmsg, "loss": loss}
@@ -201,7 +251,14 @@ class AsyncFederatedExperiment(FedExperiment):
                 discarded += 1
                 t.client_dropped(ev.client_id, reason="max_staleness",
                                  version=ev.version, sim_time=ev.time)
-                if self._ef:
+                if self._ef_store is not None:
+                    # re-acquire: the row may have been evicted (and
+                    # spilled) while this result was in flight
+                    slot = int(self._ef_store.acquire([ev.client_id])[0])
+                    self._ef_store.state = self._ef_restore(
+                        self._ef_store.state, jnp.asarray(slot),
+                        ev.payload["delta"])
+                elif self._ef:
                     # the residual was committed at dispatch assuming this
                     # upload would be aggregated — restore the discarded
                     # components into the client's residual (EF invariant:
@@ -258,6 +315,11 @@ class AsyncFederatedExperiment(FedExperiment):
             "discarded": float(discarded),
         })
         rec["round"] = self.server.round
+        if self._ef_store is not None:
+            rec.update(state_resident=self._ef_store.resident,
+                       state_peak=self._ef_store.peak_resident,
+                       state_spills=self._ef_store.spills,
+                       state_restores=self._ef_store.restores)
         if self.eval_fn is not None:
             with t.span("eval", round=rnum, sim_time=sched.now):
                 rec.update({k: float(v) for k, v in

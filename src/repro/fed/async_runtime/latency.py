@@ -15,6 +15,9 @@ import dataclasses
 
 import numpy as np
 
+# domain-separation tag for per-id derived speeds (population mode)
+_SPEED_TAG = 0x5BEED
+
 
 @dataclasses.dataclass(frozen=True)
 class LatencyModel:
@@ -31,6 +34,17 @@ class LatencyModel:
             return np.ones(n_clients)
         # median-1 lognormal: half the fleet faster, half slower
         return np.exp(rng.normal(0.0, self.heterogeneity, size=n_clients))
+
+    def client_speed(self, seed: int, client_id: int) -> float:
+        """One client's persistent speed, derived from its global id alone
+        (population mode): ``SeedSequence((seed, tag, client_id))`` — the
+        same multiplier whether the id space holds 10^2 or 10^6 clients,
+        with no dense speeds array."""
+        if self.heterogeneity <= 0.0:
+            return 1.0
+        rng = np.random.default_rng(
+            np.random.SeedSequence((int(seed), _SPEED_TAG, int(client_id))))
+        return float(np.exp(rng.normal(0.0, self.heterogeneity)))
 
     def sample_latency(self, speed: float, rng: np.random.Generator) -> float:
         d = self.distribution

@@ -8,6 +8,16 @@ seeded ``np.random.Generator`` and ties break on the monotone dispatch
 sequence number, the event order is fully deterministic per seed — the
 property the runtime tests pin down.
 
+Population mode (a ``fed.population.ClientPopulation`` passed in): client
+ids are stable *global* ids drawn from the abstract id space, never a dense
+0..N-1 enumeration.  Per-client randomness derives from the id itself —
+persistent speed via ``LatencyModel.client_speed(seed, cid)``, per-dispatch
+latency/dropout from ``SeedSequence((seed, tag, cid, dispatch_index))`` —
+so one client's realizations are invariant to population size, to who else
+is in flight, and to event interleaving.  Only the *selection* of which
+idle client to dispatch consumes the shared scheduler generator.  The
+legacy dense branch (``population=None``) is byte-identical to before.
+
 The scheduler is payload-agnostic: the experiment attaches whatever the
 "client" computed at dispatch time (its trained delta/Theta under the
 then-current server state) and reads it back on completion, which is exactly
@@ -23,6 +33,9 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from repro.fed.async_runtime.latency import LatencyModel
+
+# domain-separation tag for per-dispatch latency/dropout streams
+_DISPATCH_TAG = 0xD15
 
 
 @dataclasses.dataclass(order=True)
@@ -40,15 +53,23 @@ class SimScheduler:
     """Bounded-concurrency client pool over simulated time."""
 
     def __init__(self, latency: LatencyModel, n_clients: int,
-                 concurrency: int, seed: int = 0):
-        if concurrency > n_clients:
+                 concurrency: int, seed: int = 0, population=None):
+        self.population = population
+        pool = n_clients if population is None else population.size
+        if concurrency > pool:
             raise ValueError(
-                f"concurrency {concurrency} exceeds n_clients {n_clients}")
+                f"concurrency {concurrency} exceeds the client pool {pool}")
         self.latency = latency
         self.n_clients = n_clients
         self.concurrency = concurrency
         self.rng = np.random.default_rng(seed)
-        self.speeds = latency.client_speeds(n_clients, self.rng)
+        self._seed = int(seed)
+        if population is None:
+            self.speeds = latency.client_speeds(n_clients, self.rng)
+        else:
+            self.speeds = None               # derived per id, cached sparse
+            self._speed_cache: dict = {}
+            self._dispatch_counts: dict = {}
         self.now = 0.0
         self._seq = 0
         self._heap: list[Completion] = []
@@ -57,8 +78,19 @@ class SimScheduler:
     # ------------------------------------------------------------ dispatch
 
     def idle_clients(self) -> np.ndarray:
+        if self.population is not None:
+            raise RuntimeError(
+                "population mode has no dense idle list — idle clients are "
+                "rejection-sampled from the id space (fill/sample_dispatch)")
         return np.array([c for c in range(self.n_clients)
                          if c not in self._in_flight])
+
+    def dispatch_salt(self, client_id: int) -> int:
+        """The dispatch index of ``client_id``'s in-progress (or most
+        recent) dispatch — the salt its payload staging must reuse so a
+        client's training stream is tied to (id, dispatch), not to global
+        event order."""
+        return self._dispatch_counts.get(int(client_id), 1) - 1
 
     def dispatch(self, client_id: int, version: int,
                  payload_fn: Optional[Callable[[int], Any]] = None):
@@ -68,8 +100,22 @@ class SimScheduler:
         drop never pays for local training — only its simulated time."""
         if client_id in self._in_flight:
             raise ValueError(f"client {client_id} already in flight")
-        lat = self.latency.sample_latency(self.speeds[client_id], self.rng)
-        dropped = self.latency.sample_dropout(self.rng)
+        if self.population is None:
+            lat = self.latency.sample_latency(self.speeds[client_id],
+                                              self.rng)
+            dropped = self.latency.sample_dropout(self.rng)
+        else:
+            cid = int(client_id)
+            salt = self._dispatch_counts.get(cid, 0)
+            self._dispatch_counts[cid] = salt + 1
+            speed = self._speed_cache.get(cid)
+            if speed is None:
+                speed = self.latency.client_speed(self._seed, cid)
+                self._speed_cache[cid] = speed
+            rng = np.random.default_rng(np.random.SeedSequence(
+                (self._seed, _DISPATCH_TAG, cid, salt)))
+            lat = self.latency.sample_latency(speed, rng)
+            dropped = self.latency.sample_dropout(rng)
         payload = payload_fn(client_id) \
             if (payload_fn is not None and not dropped) else None
         ev = Completion(self.now + lat, self._seq, int(client_id),
@@ -84,8 +130,12 @@ class SimScheduler:
         """Dispatch uniformly-sampled idle clients until the pool is full."""
         started = []
         while len(self._in_flight) < self.concurrency:
-            idle = self.idle_clients()
-            cid = int(self.rng.choice(idle))
+            if self.population is None:
+                idle = self.idle_clients()
+                cid = int(self.rng.choice(idle))
+            else:
+                cid = self.population.sample_dispatch(
+                    self.rng, exclude=self._in_flight, t=self.now)
             started.append(self.dispatch(cid, version, payload_fn))
         return started
 

@@ -1,0 +1,23 @@
+"""Million-client population layer: streaming cohorts over an abstract
+client-id space, sparse per-client state with LRU spill through the
+checkpoint store, and on-demand batch staging — population size becomes a
+real config knob (``FedConfig.population_size`` / ``cohort_size`` /
+``state_budget``) whose cost scales with the cohort, not the id space."""
+from repro.fed.population.directory import (
+    AvailabilitySampler, ClientPopulation, SAMPLERS, UniformSampler,
+    WeightedSampler, make_population, resolve_population,
+)
+from repro.fed.population.state import (
+    ClientStateStore, DenseClientStore, make_client_store,
+)
+from repro.fed.population.batches import (
+    stage_client_population_batches, stage_population_batches,
+)
+
+__all__ = [
+    "AvailabilitySampler", "ClientPopulation", "SAMPLERS", "UniformSampler",
+    "WeightedSampler", "make_population", "resolve_population",
+    "ClientStateStore",
+    "DenseClientStore", "make_client_store",
+    "stage_client_population_batches", "stage_population_batches",
+]

@@ -1,0 +1,44 @@
+"""On-demand batch staging for sampled cohorts.
+
+The dense runtimes stage batches with the experiment's shared generator —
+fine when every client exists up front, wrong at population scale where a
+client's data stream must not depend on who else was sampled or when.
+Here each client's staging generator derives from the population's
+``SeedSequence((seed, client_id, salt))`` stream (``ClientPopulation.
+client_rng``), so staging the same client with the same salt yields the
+same batches whether the population holds 10^2 or 10^6 ids, and whatever
+cohort it rode in.
+
+Only the sampled cohort is ever staged: peak memory is (S, K, ...) —
+cohort-proportional, never population-proportional.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.fed.staging import _stack_steps, _stacker
+
+
+def stage_population_batches(client_batch_fn, population, cohort,
+                             local_steps: int, salt: int = 0):
+    """A cohort's batches, (S, K, ...) stacked, each client drawing from its
+    own fold_in-derived generator.  ``salt`` separates rounds (sync: the
+    round index; async: the client's dispatch count)."""
+    per_client = [
+        _stack_steps(client_batch_fn, int(cid), local_steps,
+                     population.client_rng(int(cid), salt))
+        for cid in cohort]
+    stack = _stacker(per_client[0])
+    stacked = jax.tree.map(lambda *xs: stack(xs), *per_client)
+    return jax.tree.map(jnp.asarray, stacked)
+
+
+def stage_client_population_batches(client_batch_fn, population, cid: int,
+                                    local_steps: int, salt: int = 0):
+    """One client's (K, ...) batches from its own derived generator (the
+    async runtime stages per-dispatch, not per-cohort)."""
+    return jax.tree.map(
+        jnp.asarray,
+        _stack_steps(client_batch_fn, int(cid), local_steps,
+                     population.client_rng(int(cid), salt)))

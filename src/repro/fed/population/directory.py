@@ -1,0 +1,290 @@
+"""Client directory over an abstract id space — no dense per-client lists.
+
+A ``ClientPopulation`` is the id space ``[0, size)`` plus a streaming
+``CohortSampler``: cohorts are *drawn*, never enumerated, so a 10^6-client
+population costs O(cohort) work and memory per round, not O(population).
+
+Every per-client draw — local-update PRNG keys, batch-staging generators,
+latency/dropout realizations — derives from ``fold_in(seed, client_id)``
+(jax keys) or the ``SeedSequence((seed, tag, client_id, salt))`` analog
+(numpy generators).  Two consequences the tests pin down:
+
+* a fixed cohort's round is **invariant to population size** — growing the
+  id space from 10^2 to 10^6 does not perturb a single client's draws;
+* draws are independent of **materialization order** — whether a client's
+  state was resident, spilled, or never touched cannot shift its stream.
+
+Cohort draws themselves are seeded per ``(seed, round)`` so the schedule of
+cohorts is reproducible without any cross-round RNG threading.
+
+The legacy dense-list path (``FedConfig.population_size is None``) does not
+run through this module: it keeps the experiment's shared generator and its
+historical draw order bitwise-intact.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# domain-separation tags for the SeedSequence streams (arbitrary, fixed)
+_COHORT_TAG = 0xC0607
+_CLIENT_TAG = 0xC11E57
+_MAX_REJECT_ROUNDS = 64
+
+
+def _distinct_uniform(rng: np.random.Generator, size: int, k: int,
+                      exclude=frozenset()) -> np.ndarray:
+    """``k`` distinct ids from ``[0, size)`` minus ``exclude`` in O(k) memory.
+
+    Small id spaces take the exact permutation route; large ones
+    rejection-sample (the regime where k << size, so collisions are rare).
+    """
+    avail = size - len(exclude)
+    if k > avail:
+        raise ValueError(
+            f"cannot draw {k} distinct clients from an id space of {size} "
+            f"with {len(exclude)} excluded")
+    if size <= max(4 * k, 1024) + len(exclude):
+        pool = np.arange(size)
+        if exclude:
+            pool = pool[~np.isin(pool, np.fromiter(exclude, np.int64,
+                                                   len(exclude)))]
+        return rng.permutation(pool)[:k]
+    chosen: list = []
+    seen = set(exclude)
+    for _ in range(_MAX_REJECT_ROUNDS):
+        draw = rng.integers(0, size, size=2 * (k - len(chosen)) + 8)
+        for cid in draw:
+            c = int(cid)
+            if c not in seen:
+                seen.add(c)
+                chosen.append(c)
+                if len(chosen) == k:
+                    return np.asarray(chosen, np.int64)
+    raise RuntimeError(    # pragma: no cover — k << size makes this unreachable
+        f"rejection sampling failed to find {k} distinct ids in {size}")
+
+
+class UniformSampler:
+    """Uniform cohort draws without replacement, streaming."""
+
+    def sample(self, rng: np.random.Generator, size: int, k: int, *,
+               t: float = 0) -> np.ndarray:
+        del t
+        return _distinct_uniform(rng, size, k)
+
+
+class WeightedSampler:
+    """Weight-proportional cohorts via Gumbel top-k over a candidate pool.
+
+    ``weight_fn(ids) -> (len(ids),) nonnegative weights`` is evaluated only
+    on sampled candidates, never on the full population.  Id spaces small
+    enough to enumerate (<= ``exact_below``) are sampled exactly; larger
+    ones draw a uniform candidate pool of ``oversample * k`` ids first, so
+    the draw is weight-proportional *within the pool* — an approximation
+    whose bias shrinks as ``oversample`` grows.
+    """
+
+    def __init__(self, weight_fn: Callable[[np.ndarray], np.ndarray],
+                 oversample: int = 16, exact_below: int = 65536):
+        if oversample < 2:
+            raise ValueError(f"oversample must be >= 2, got {oversample}")
+        self.weight_fn = weight_fn
+        self.oversample = int(oversample)
+        self.exact_below = int(exact_below)
+
+    def sample(self, rng: np.random.Generator, size: int, k: int, *,
+               t: float = 0) -> np.ndarray:
+        del t
+        if k > size:
+            raise ValueError(f"cohort {k} exceeds population {size}")
+        if size <= max(self.exact_below, self.oversample * k):
+            cand = np.arange(size)
+        else:
+            cand = _distinct_uniform(rng, size, self.oversample * k)
+        w = np.asarray(self.weight_fn(cand), np.float64)
+        if w.shape != cand.shape:
+            raise ValueError(
+                f"weight_fn returned shape {w.shape} for {cand.shape} ids")
+        if np.any(w < 0) or not np.any(w > 0):
+            raise ValueError("weights must be nonnegative with at least "
+                             f"{k} strictly positive entries")
+        if int(np.sum(w > 0)) < k:
+            raise ValueError(
+                f"only {int(np.sum(w > 0))} candidates have positive weight "
+                f"but the cohort needs {k}")
+        # Gumbel top-k == sequential weighted sampling without replacement
+        with np.errstate(divide="ignore"):
+            keys = np.where(w > 0, np.log(w), -np.inf) + rng.gumbel(
+                size=w.shape)
+        return cand[np.argsort(-keys, kind="stable")[:k]].astype(np.int64)
+
+
+class AvailabilitySampler:
+    """Cohorts restricted to an availability trace.
+
+    ``available_fn(ids, t) -> bool mask`` answers which of the candidate ids
+    are online at time ``t`` (the round index in the sync runtime, the
+    simulated clock in the async one) — e.g. diurnal cycles as a function of
+    ``client_id % timezone_buckets``.  Candidates are streamed uniformly and
+    filtered; a trace too sparse to fill the cohort raises instead of
+    spinning.
+    """
+
+    def __init__(self, available_fn: Callable[[np.ndarray, float], np.ndarray],
+                 max_rounds: int = _MAX_REJECT_ROUNDS):
+        self.available_fn = available_fn
+        self.max_rounds = int(max_rounds)
+
+    def sample(self, rng: np.random.Generator, size: int, k: int, *,
+               t: float = 0) -> np.ndarray:
+        if k > size:
+            raise ValueError(f"cohort {k} exceeds population {size}")
+        chosen: list = []
+        seen: set = set()
+        for _ in range(self.max_rounds):
+            cand = _distinct_uniform(rng, size, min(size - len(seen), 2 * k),
+                                     exclude=seen)
+            seen.update(int(c) for c in cand)
+            mask = np.asarray(self.available_fn(cand, t), bool)
+            chosen.extend(int(c) for c in cand[mask])
+            if len(chosen) >= k:
+                return np.asarray(chosen[:k], np.int64)
+            if len(seen) >= size:
+                break
+        raise RuntimeError(
+            f"availability trace too sparse at t={t}: found {len(chosen)} "
+            f"available clients of the {k} needed (population {size})")
+
+
+# config-string-constructible samplers; weighted/availability need callables,
+# so they are only reachable by passing a ClientPopulation object explicitly
+SAMPLERS = {"uniform": UniformSampler}
+
+
+class ClientPopulation:
+    """An abstract client-id space ``[0, size)`` with streaming cohorts."""
+
+    def __init__(self, size: int, *, seed: int = 0,
+                 sampler: Optional[object] = None):
+        if size < 1:
+            raise ValueError(f"population size must be >= 1, got {size}")
+        self.size = int(size)
+        self.seed = int(seed)
+        self.sampler = sampler if sampler is not None else UniformSampler()
+        self._base_key = jax.random.key(self.seed)
+
+    # ------------------------------------------------------------ cohorts
+
+    def sample_cohort(self, round_index: int, cohort_size: int) -> np.ndarray:
+        """One round's cohort: distinct global ids, seeded per (seed, round).
+
+        Reproducible in isolation — no generator is threaded between rounds,
+        so round r's cohort is the same whether rounds 0..r-1 ran or not.
+        """
+        rng = np.random.default_rng(
+            np.random.SeedSequence((self.seed, _COHORT_TAG,
+                                    int(round_index))))
+        ids = np.asarray(self.sampler.sample(rng, self.size,
+                                             int(cohort_size),
+                                             t=int(round_index)), np.int64)
+        self._check_ids(ids, cohort_size)
+        return ids
+
+    def sample_dispatch(self, rng: np.random.Generator, exclude=frozenset(),
+                        t: float = 0) -> int:
+        """One client for an async dispatch slot, skipping in-flight ids."""
+        for _ in range(_MAX_REJECT_ROUNDS * 16):
+            ids = self.sampler.sample(rng, self.size, 1, t=t)
+            if int(ids[0]) not in exclude:
+                return int(ids[0])
+        raise RuntimeError(
+            f"could not draw an idle client: {len(exclude)} of {self.size} "
+            "ids are in flight and the sampler keeps returning them")
+
+    def _check_ids(self, ids: np.ndarray, k: int) -> None:
+        if len(ids) != k or len(np.unique(ids)) != k:
+            raise ValueError(
+                f"sampler returned {len(ids)} ids "
+                f"({len(np.unique(ids))} distinct) for cohort size {k}")
+        if ids.size and (ids.min() < 0 or ids.max() >= self.size):
+            raise ValueError(
+                f"sampler returned ids outside [0, {self.size}): "
+                f"[{ids.min()}, {ids.max()}]")
+
+    # --------------------------------------------------- per-client streams
+
+    def _check_id(self, client_id: int) -> int:
+        cid = int(client_id)
+        if not 0 <= cid < self.size:
+            raise ValueError(
+                f"client id {cid} outside id space [0, {self.size})")
+        return cid
+
+    def client_rng(self, client_id: int, salt: int = 0) -> np.random.Generator:
+        """A numpy generator owned by ``client_id`` alone (host-side draws:
+        batch sampling, latency realizations).  ``salt`` separates uses
+        within one client — the round index (sync) or the client's dispatch
+        count (async)."""
+        return np.random.default_rng(
+            np.random.SeedSequence((self.seed, _CLIENT_TAG,
+                                    self._check_id(client_id), int(salt))))
+
+    def client_key(self, client_id: int, salt: int = 0):
+        """The jax analog: ``fold_in(fold_in(key(seed), client_id), salt)``."""
+        return jax.random.fold_in(
+            jax.random.fold_in(self._base_key, self._check_id(client_id)),
+            int(salt))
+
+    def cohort_keys(self, cohort, salt: int = 0):
+        """Stacked (S,) per-client keys for a whole cohort (one device op)."""
+        ids = jnp.asarray(np.asarray(cohort))
+        return jax.vmap(
+            lambda c: jax.random.fold_in(
+                jax.random.fold_in(self._base_key, c), salt))(ids)
+
+    def __repr__(self):
+        return (f"ClientPopulation(size={self.size}, seed={self.seed}, "
+                f"sampler={type(self.sampler).__name__})")
+
+
+def make_population(fed) -> ClientPopulation:
+    """Build the population a config describes (``population_size``,
+    ``cohort_sampler``, ``seed``).  Richer samplers (weighted, availability
+    traces) carry callables a config string cannot, so they are passed as
+    ready ``ClientPopulation`` objects instead."""
+    if getattr(fed, "population_size", None) is None:
+        raise ValueError("make_population needs a config with "
+                         "population_size set")
+    name = getattr(fed, "cohort_sampler", "uniform")
+    if name not in SAMPLERS:
+        raise ValueError(
+            f"unknown cohort_sampler {name!r} (config strings support "
+            f"{sorted(SAMPLERS)}; pass a ClientPopulation for weighted/"
+            "availability sampling)")
+    return ClientPopulation(fed.population_size, seed=fed.seed,
+                            sampler=SAMPLERS[name]())
+
+
+def resolve_population(fed, population=None) -> Optional[ClientPopulation]:
+    """Both runtimes' population plumbing: None unless the config activates
+    population mode; an explicitly-passed ``ClientPopulation`` (the only way
+    to carry weighted/availability samplers) must agree with the config's
+    sizing knobs."""
+    if population is None:
+        if not getattr(fed, "population_active", False):
+            return None
+        return make_population(fed)
+    if not getattr(fed, "population_active", False):
+        raise ValueError(
+            "a ClientPopulation was passed but population_size is not set — "
+            "population mode needs the FedConfig knobs (population_size, "
+            "cohort_size) for validation and sizing")
+    if population.size != fed.population_size:
+        raise ValueError(
+            f"population.size {population.size} != fed.population_size "
+            f"{fed.population_size}")
+    return population

@@ -1,0 +1,188 @@
+"""Sparse client-state store: the ``ClientStateSpec`` protocol, lazily.
+
+The engine keeps per-client persistent state *stacked* with a leading
+client axis so cohorts gather/scatter it inside jit.  At population scale
+that axis cannot be the population: a million SCAFFOLD variates would dwarf
+the model.  The store keeps the stacked axis sized to a fixed ``budget`` of
+*slots* and maintains the client-id -> slot mapping host-side:
+
+* a client's state **materializes on first selection** (fresh rows are the
+  spec's zero-init),
+* hot clients stay resident (LRU on every selection),
+* cold entries **spill** to the checkpoint store (``save_pytree`` /
+  ``load_pytree`` — atomic .npz with exact dtypes, bf16 included) and are
+  restored bit-exactly when the client is drawn again.
+
+``acquire(cohort_ids)`` returns the cohort's *slot* indices — what the
+round_fn scatters by — after evicting/restoring as needed.  Numerics are
+untouched: gather/scatter by slot never mixes rows, fresh rows equal the
+dense path's zero-init, and a spill→restore round-trip is byte-identical
+(the bitwise sparse-vs-dense tests pin this for SCAFFOLD + error-feedback
+composition on both runtimes).
+
+Algorithm semantics stay population-true: ``server_update`` still receives
+``n_clients = population_size`` (SCAFFOLD's ``S/N`` uses the real N), and
+shared globals (``c_global``) live resident in the stacked state — only
+private rows (declared via ``ClientStateSpec.client_export/client_import``)
+travel to disk.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.store import load_pytree, save_pytree
+from repro.core.algorithms import (
+    ClientStateSpec, state_export, state_import_many,
+)
+
+
+class DenseClientStore:
+    """Budget covers the whole population: slots are client ids, no
+    spilling.  The legacy dense-list behavior as a store — and the golden
+    reference the sparse store is tested bitwise against."""
+
+    def __init__(self, proto: ClientStateSpec, params, population_size: int):
+        self.proto = proto
+        self.budget = int(population_size)
+        self.population_size = int(population_size)
+        self.state = proto.init(params, population_size)
+        self.spills = 0
+        self.restores = 0
+        self._touched: set = set()
+
+    @property
+    def resident(self) -> int:
+        return len(self._touched)
+
+    @property
+    def peak_resident(self) -> int:
+        return len(self._touched)
+
+    def acquire(self, ids) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        self._touched.update(int(c) for c in ids)
+        return ids
+
+
+class ClientStateStore:
+    """LRU-budgeted sparse store over a ``budget``-slot stacked state."""
+
+    def __init__(self, proto: ClientStateSpec, params, population_size: int,
+                 budget: int, spill_dir: Optional[str] = None):
+        if budget < 1:
+            raise ValueError(f"state budget must be >= 1, got {budget}")
+        if budget > population_size:
+            raise ValueError(
+                f"state budget {budget} exceeds population {population_size}"
+                " (use DenseClientStore / make_client_store)")
+        self.proto = proto
+        self.budget = int(budget)
+        self.population_size = int(population_size)
+        self.state = proto.init(params, budget)
+        # the zero-init row: scatter target for first-time clients and the
+        # load_pytree shape/dtype template for restores
+        self._fresh = state_export(proto, proto.init(params, 1), 0)
+        if spill_dir is None:
+            spill_dir = tempfile.mkdtemp(prefix="repro_client_spill_")
+        self.spill_dir = spill_dir
+        os.makedirs(self.spill_dir, exist_ok=True)
+        self._slot_of: "OrderedDict[int, int]" = OrderedDict()  # LRU order
+        self._free = list(range(budget - 1, -1, -1))
+        self._spilled: set = set()
+        self.spills = 0
+        self.restores = 0
+        self.peak_resident = 0
+
+    # ------------------------------------------------------------- plumbing
+
+    @property
+    def resident(self) -> int:
+        return len(self._slot_of)
+
+    def _spill_path(self, cid: int) -> str:
+        return os.path.join(self.spill_dir, f"client_{cid:012d}.npz")
+
+    def _evict_one(self, protected: set) -> int:
+        """Spill the least-recently-used client not in the incoming cohort;
+        returns its freed slot."""
+        for cid in self._slot_of:          # OrderedDict: LRU first
+            if cid not in protected:
+                slot = self._slot_of.pop(cid)
+                save_pytree(state_export(self.proto, self.state, slot),
+                            self._spill_path(cid))
+                self._spilled.add(cid)
+                self.spills += 1
+                return slot
+        raise RuntimeError(
+            f"cannot evict: all {self.budget} resident clients are in the "
+            "incoming cohort (state budget must be >= cohort size)")
+
+    # -------------------------------------------------------------- acquire
+
+    def acquire(self, ids) -> np.ndarray:
+        """Slot indices for a cohort of global client ids, materializing/
+        restoring rows as needed.  The round_fn gathers views and scatters
+        updates by these slots; the mapping persists until eviction."""
+        ids = np.asarray(ids, np.int64)
+        if len(ids) > self.budget:
+            raise ValueError(
+                f"cohort of {len(ids)} exceeds the state budget "
+                f"{self.budget}: every cohort member needs a resident slot")
+        incoming = {int(c) for c in ids}
+        if len(incoming) != len(ids):
+            raise ValueError("acquire wants distinct client ids")
+        slots = np.empty(len(ids), np.int64)
+        # two-pass: collect every missing client's (slot, row), then graft
+        # them in ONE batched scatter — per-client functional .at[].set
+        # would copy the whole budget-sized state once per miss
+        # (O(cohort x budget) per acquire).  Evictions during collection
+        # only ever export previous residents (incoming ids are protected),
+        # whose rows in self.state are untouched until the final scatter.
+        miss_slots, miss_rows = [], []
+        for i, cid in enumerate(int(c) for c in ids):
+            if cid in self._slot_of:
+                self._slot_of.move_to_end(cid)      # touch
+                slots[i] = self._slot_of[cid]
+                continue
+            slot = self._free.pop() if self._free else \
+                self._evict_one(incoming)
+            if cid in self._spilled:
+                row = load_pytree(self._fresh, self._spill_path(cid))
+                self._spilled.discard(cid)
+                os.unlink(self._spill_path(cid))
+                self.restores += 1
+            else:
+                row = self._fresh               # first selection: zero-init
+            miss_slots.append(slot)
+            miss_rows.append(row)
+            self._slot_of[cid] = slot
+            slots[i] = slot
+        if miss_slots:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *miss_rows)
+            self.state = state_import_many(
+                self.proto, self.state, np.asarray(miss_slots, np.int64),
+                stacked)
+        self.peak_resident = max(self.peak_resident, len(self._slot_of))
+        return slots
+
+
+def make_client_store(proto: Optional[ClientStateSpec], params,
+                      population_size: int, budget: Optional[int] = None,
+                      spill_dir: Optional[str] = None):
+    """The store a run needs: ``None`` for stateless algorithms, dense when
+    the budget covers the population (no spill machinery in the loop),
+    sparse-LRU otherwise."""
+    if proto is None:
+        return None
+    if budget is None or budget >= population_size:
+        return DenseClientStore(proto, params, population_size)
+    return ClientStateStore(proto, params, population_size, budget,
+                            spill_dir=spill_dir)

@@ -60,8 +60,19 @@ class FedConfig:
     seed: int = 0
     server_lr: float = 1.0
     runtime: str = "sync"          # "sync" | "async" (fed.base.make_experiment)
-    executor: str = "vmap"         # cohort executor: vmap|shard_map|chunked
-    chunk_size: int = 8            # for executor="chunked"
+    executor: str = "vmap"         # cohort executor:
+    #                                vmap|shard_map|chunked|sharded
+    chunk_size: int = 8            # for executor="chunked"/"sharded"
+    # ---- population scale-out (fed.population). None -> legacy dense path
+    # (n_clients dense lists, shared-RNG draw order preserved bitwise).
+    population_size: Optional[int] = None  # abstract client-id space size
+    cohort_size: Optional[int] = None      # clients per round (required
+    #                                        when population_size is set)
+    state_budget: Optional[int] = None     # resident client-state slots;
+    #                                        None -> min(pop, 4 * cohort)
+    cohort_sampler: str = "uniform"        # population cohort sampler name
+    spill_dir: Optional[str] = None        # cold-state spill dir (None ->
+    #                                        a fresh temp dir)
     # geometry transport (core.transport): None inherits the spec's declared
     # codec specs (upload / delta_upload); strings may chain with "+"
     theta_codec: Optional[str] = None
@@ -109,6 +120,55 @@ class FedConfig:
         if self.sketch_iters < 0:
             raise ValueError(
                 f"sketch_iters must be >= 0, got {self.sketch_iters}")
+        self._validate_population()
+
+    def _validate_population(self):
+        if self.population_size is None:
+            pop_only = {"cohort_size": self.cohort_size,
+                        "state_budget": self.state_budget,
+                        "spill_dir": self.spill_dir}
+            stray = [k for k, v in pop_only.items() if v is not None]
+            if self.cohort_sampler != "uniform":
+                stray.append("cohort_sampler")
+            if stray:
+                raise ValueError(
+                    f"{', '.join(sorted(stray))} only apply to population "
+                    "mode — set population_size as well")
+            return
+        if self.population_size < 1:
+            raise ValueError(
+                f"population_size must be >= 1, got {self.population_size}")
+        if self.cohort_size is None:
+            raise ValueError(
+                "population mode needs an explicit cohort_size "
+                "(participation fractions don't scale to 10^6-id spaces)")
+        if not 1 <= self.cohort_size <= self.population_size:
+            raise ValueError(
+                f"cohort_size must be in [1, population_size="
+                f"{self.population_size}], got {self.cohort_size}")
+        if self.state_budget is not None and \
+                self.state_budget < self.cohort_size:
+            raise ValueError(
+                f"state_budget {self.state_budget} < cohort_size "
+                f"{self.cohort_size}: every cohort member needs a resident "
+                "state slot")
+        from repro.fed.population.directory import SAMPLERS
+        if self.cohort_sampler not in SAMPLERS:
+            raise ValueError(
+                f"unknown cohort_sampler {self.cohort_sampler!r} (config "
+                f"strings support {sorted(SAMPLERS)}; pass a "
+                "ClientPopulation for weighted/availability sampling)")
+
+    @property
+    def population_active(self) -> bool:
+        return self.population_size is not None
+
+    def resolve_state_budget(self) -> int:
+        """Resident client-state slots: explicit budget, else enough for a
+        few cohorts of churn without population-proportional memory."""
+        if self.state_budget is not None:
+            return self.state_budget
+        return min(self.population_size, 4 * self.cohort_size)
 
     def executor_config(self) -> ExecutorConfig:
         return ExecutorConfig(backend=self.executor,
@@ -161,12 +221,23 @@ class FederatedExperiment(FedExperiment):
     ``AlgorithmSpec`` works; ``fed.algorithm`` is only consulted when it is
     None.  The spec is resolved once here and reused for the round fn, the
     optimizer, and comm accounting.
+
+    Population mode (``fed.population_size`` set, optionally with an
+    explicit ``population=`` carrying a weighted/availability sampler):
+    cohorts stream from the abstract id space, every per-client draw
+    derives from ``fold_in(seed, client_id)`` (round salt separates
+    rounds), per-client state lives in a budgeted sparse store
+    (``fed.population.make_client_store``) whose cold rows spill through
+    the checkpoint store, and the round_fn receives *slot* indices plus
+    pre-derived stacked keys.  The legacy path (``population_size=None``)
+    keeps its shared-generator draw order bitwise-intact.
     """
 
     def __init__(self, fed: FedConfig, params, loss_fn: Callable,
                  client_batch_fn: Callable, eval_fn: Optional[Callable] = None,
                  opt_kwargs: Optional[dict] = None,
-                 spec: Optional[AlgorithmSpec] = None):
+                 spec: Optional[AlgorithmSpec] = None,
+                 population: Optional[object] = None):
         super().__init__(fed)
         self.spec = resolve(spec if spec is not None else fed.algorithm)
         self.loss_fn = loss_fn
@@ -174,6 +245,9 @@ class FederatedExperiment(FedExperiment):
         self.eval_fn = eval_fn
         self.rng = np.random.default_rng(fed.seed)
 
+        self.population = self._resolve_population(population)
+        n_for_state = (fed.population_size if self.population is not None
+                       else fed.n_clients)
         self.opt = self.spec.make_optimizer(**(opt_kwargs or {}))
         self.lr = resolve_lr(fed, self.spec)
         beta = self.spec.resolve_beta(fed.beta)
@@ -183,13 +257,28 @@ class FederatedExperiment(FedExperiment):
             local_steps=fed.local_steps, beta=beta,
             hessian_freq=fed.hessian_freq, server_lr=fed.server_lr,
             transport=self.transport,
-            executor=fed.executor_config(), n_clients=fed.n_clients,
+            executor=fed.executor_config(), n_clients=n_for_state,
             telemetry=True)
         geom = make_controller(beta, correct=self.spec.correct,
                                beta_max=BETA_MAX_AUTO)
         self.server = init_server(params, self.opt, geom=geom)
-        self.client_state = init_round_client_state(
-            self.spec, self.transport, params, fed.n_clients)
+        if self.population is not None:
+            from repro.core.algorithms import round_client_state_spec
+            from repro.fed.population import make_client_store
+            self.state_store = make_client_store(
+                round_client_state_spec(self.spec, self.transport), params,
+                fed.population_size, budget=fed.resolve_state_budget(),
+                spill_dir=fed.spill_dir)
+            self.client_state = (self.state_store.state
+                                 if self.state_store is not None else None)
+        else:
+            self.state_store = None
+            self.client_state = init_round_client_state(
+                self.spec, self.transport, params, fed.n_clients)
+
+    def _resolve_population(self, population):
+        from repro.fed.population import resolve_population
+        return resolve_population(self.fed, population)
 
     # ------------------------------------------------------------ staging
 
@@ -202,27 +291,54 @@ class FederatedExperiment(FedExperiment):
         return stage_cohort_batches(self.client_batch_fn, cohort,
                                     self.fed.local_steps, self.rng)
 
+    def _stage_population(self, round_index: int):
+        """One population round's inputs: streamed cohort, fold_in-derived
+        batches and stacked keys (round_index as the salt), and the cohort's
+        state-store *slots* (acquire materializes/restores rows)."""
+        from repro.fed.population import stage_population_batches
+        pop = self.population
+        cohort = pop.sample_cohort(round_index, self.fed.cohort_size)
+        batches = stage_population_batches(
+            self.client_batch_fn, pop, cohort, self.fed.local_steps,
+            salt=round_index)
+        keys = pop.cohort_keys(cohort, salt=round_index)
+        slots = (self.state_store.acquire(cohort)
+                 if self.state_store is not None else cohort)
+        return slots, batches, keys
+
     # ------------------------------------------------------------ loop
 
     def run_round(self):
         t = self.tracer
         rnum = self.server.round + 1   # the round this update produces
         with t.span("staging", round=rnum):
-            cohort = self._sample_cohort()
-            batches = self._stage_batches(cohort)
-            key = jax.random.key(int(self.rng.integers(0, 2**31)))
+            if self.population is not None:
+                slots, batches, key = self._stage_population(rnum - 1)
+            else:
+                cohort = self._sample_cohort()
+                batches = self._stage_batches(cohort)
+                key = jax.random.key(int(self.rng.integers(0, 2**31)))
+                slots = cohort
         # one jitted call fuses local update + wire encode + aggregation;
         # the span blocks on the result only when someone is tracing
         with t.span("update", round=rnum):
+            cstate = (self.state_store.state
+                      if self.state_store is not None else self.client_state)
             self.server, self.client_state, metrics = self.round_fn(
-                self.server, self.client_state, jnp.asarray(cohort), batches,
-                key)
+                self.server, cstate, jnp.asarray(slots), batches, key)
+            if self.state_store is not None:
+                self.state_store.state = self.client_state
             if t.enabled:
                 jax.block_until_ready(metrics)
         tele = metrics.pop("telemetry", None)
         self.last_telemetry = tele
         rec = {k: float(v) for k, v in metrics.items()}
         rec["round"] = self.server.round
+        if self.state_store is not None:
+            rec.update(state_resident=self.state_store.resident,
+                       state_peak=self.state_store.peak_resident,
+                       state_spills=self.state_store.spills,
+                       state_restores=self.state_store.restores)
         if self.eval_fn is not None:
             with t.span("eval", round=rnum):
                 rec.update({k: float(v) for k, v in

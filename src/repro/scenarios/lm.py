@@ -65,6 +65,12 @@ def materialize_lm(spec: ScenarioSpec, seed: int, n_clients: int) -> Scenario:
         n_topics=kw["n_topics"], seed=seed)
     train_docs, train_topics = docs[:n_docs], topics[:n_docs]
     eval_stream = docs[n_docs:].reshape(-1)
+    if spec.partition.lazy:
+        raise ValueError(
+            f"scenario {spec.name!r}: the lm_zipf source builds eager "
+            f"per-client token streams and does not support lazy partition "
+            f"kinds ({spec.partition.kind!r}) — use an eager kind, or the "
+            "synth_image source for population-scale runs")
     parts = spec.partition.build(train_topics, n_docs, n_clients, seed)
     streams = [train_docs[p].reshape(-1) for p in parts]
     for cid, stream in enumerate(streams):

@@ -21,7 +21,8 @@ from typing import Any, Callable, Mapping, Optional, Union
 import numpy as np
 
 from repro.data.partition import (
-    dirichlet_partition, iid_partition, quantity_partition, shard_partition,
+    ClientIndexMap, dirichlet_partition, iid_partition, quantity_partition,
+    shard_partition, stream_dirichlet_map,
 )
 
 
@@ -33,7 +34,13 @@ class DuplicateScenarioError(ValueError):
     """``register`` called twice for the same scenario name."""
 
 
-PARTITION_KINDS = ("dirichlet", "shard", "quantity", "iid")
+PARTITION_KINDS = ("dirichlet", "shard", "quantity", "iid",
+                   "stream_dirichlet")
+
+#: kinds whose split is derived per client on demand (``build`` returns a
+#: ``ClientIndexMap`` instead of an eager list) — the only kinds usable at
+#: population scale (10^5+ client ids)
+LAZY_PARTITION_KINDS = ("stream_dirichlet",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,29 +48,55 @@ class PartitionSpec:
     """How samples (or documents) are split across clients.
 
     kind: one of ``PARTITION_KINDS``; ``alpha`` is the Dirichlet
-    concentration for ``dirichlet`` (label skew) and ``quantity`` (size
-    skew); ``shards_per_client`` drives the pathological ``shard`` split.
+    concentration for ``dirichlet`` (label skew), ``quantity`` (size
+    skew), and ``stream_dirichlet`` (per-client label mixture);
+    ``shards_per_client`` drives the pathological ``shard`` split.
+
+    ``stream_dirichlet`` is the lazy, population-scale analog of
+    ``dirichlet``: nothing is enumerated up front — each client's
+    ``samples_per_client`` indices derive from ``(seed, client_id)`` alone
+    (``repro.data.partition.stream_dirichlet_map``), so the same spec
+    materializes over 10 clients or 10^6 ids at the same cost.  Streamed
+    clients view the sample pool with replacement rather than owning
+    disjoint slices.
     """
     kind: str = "dirichlet"
     alpha: float = 0.1
     shards_per_client: int = 2
     min_size: int = 2
+    samples_per_client: int = 64
 
     def __post_init__(self):
         if self.kind not in PARTITION_KINDS:
             raise ValueError(
                 f"unknown partition kind {self.kind!r} "
                 f"(want one of {PARTITION_KINDS})")
-        if self.kind in ("dirichlet", "quantity") and self.alpha <= 0:
+        if self.kind in ("dirichlet", "quantity", "stream_dirichlet") and \
+                self.alpha <= 0:
             raise ValueError(f"alpha must be > 0, got {self.alpha}")
         if self.shards_per_client < 1:
             raise ValueError(
                 f"shards_per_client must be >= 1, got "
                 f"{self.shards_per_client}")
+        if self.samples_per_client < 1:
+            raise ValueError(
+                f"samples_per_client must be >= 1, got "
+                f"{self.samples_per_client}")
+
+    @property
+    def lazy(self) -> bool:
+        """Whether ``build`` yields a lazy map rather than an eager list."""
+        return self.kind in LAZY_PARTITION_KINDS
 
     def build(self, labels: Optional[np.ndarray], n_samples: int,
               n_clients: int, seed: int):
-        """Materialize the split: list of ``n_clients`` index arrays."""
+        """Materialize the split.
+
+        Eager kinds return a list of ``n_clients`` index arrays (exactly as
+        before); lazy kinds return a ``ClientIndexMap`` whose ``[cid]``
+        lookup derives that client's indices on demand.  Both support
+        ``parts[cid]`` indexing, which is all the batch functions use.
+        """
         if self.kind == "iid":
             return iid_partition(n_samples, n_clients, seed=seed)
         if self.kind == "quantity":
@@ -76,6 +109,10 @@ class PartitionSpec:
         if self.kind == "dirichlet":
             return dirichlet_partition(labels, n_clients, self.alpha,
                                        seed=seed, min_size=self.min_size)
+        if self.kind == "stream_dirichlet":
+            return stream_dirichlet_map(
+                labels, n_clients, self.alpha,
+                samples_per_client=self.samples_per_client, seed=seed)
         return shard_partition(labels, n_clients,
                                shards_per_client=self.shards_per_client,
                                seed=seed)
@@ -88,6 +125,8 @@ class PartitionSpec:
             return f"qty{self.alpha:g}"
         if self.kind == "shard":
             return f"shard{self.shards_per_client}"
+        if self.kind == "stream_dirichlet":
+            return f"sdir{self.alpha:g}"
         return "iid"
 
 
@@ -168,8 +207,10 @@ class Scenario:
     ``(params, loss_fn, client_batch_fn, eval_fn)`` —
     ``benchmarks.common.make_fed_vision_problem`` is a thin adapter over it.
 
-    partitions: per-client index arrays into the source's training set
-      (None for sources that synthesize per-client data directly).
+    partitions: per-client index arrays into the source's training set —
+      a list for eager partition kinds, a lazy ``ClientIndexMap`` for
+      streamed kinds (both index as ``partitions[cid]``), or None for
+      sources that synthesize per-client data directly.
     partition_stats: sizes + label-skew summary
       (``repro.data.partition.partition_stats``).
     meta: family-specific extras (model config, eval-set sizes, ...).
@@ -181,7 +222,7 @@ class Scenario:
     loss_fn: Callable
     client_batch_fn: Callable
     eval_fn: Optional[Callable]
-    partitions: Optional[list] = None
+    partitions: Optional[Union[list, ClientIndexMap]] = None
     partition_stats: dict = dataclasses.field(default_factory=dict)
     meta: dict = dataclasses.field(default_factory=dict)
 

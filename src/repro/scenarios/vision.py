@@ -6,6 +6,12 @@ Materialization is bitwise-faithful to the legacy
 ``benchmarks.common.make_fed_vision_problem`` wiring (same data, partition,
 init and batch RNG consumption), which is what the golden equivalence test
 pins: declaring the task did not change the task.
+
+The ``stream_dirichlet`` partition kind makes this source population-scale:
+``spec.partition.build`` then returns a lazy ``ClientIndexMap`` instead of
+an eager list, and since ``batch_fn`` only ever does ``parts[cid]``, a
+10^6-id scenario materializes in O(dataset) — client slices are derived
+the first time a cohort actually samples them.
 """
 from __future__ import annotations
 

@@ -1,0 +1,343 @@
+"""Million-client population subsystem: streaming cohort samplers, sparse
+LRU client-state store with checkpoint-store spill, lazy partitions, and the
+bitwise sparse-vs-dense equivalence contract on both runtimes."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import AsyncConfig, build_experiment
+from repro.core.algorithms import (
+    resolve, round_client_state_spec, state_export, state_import,
+)
+from repro.core.scaffold import SCAFFOLD_SPEC
+from repro.data import (
+    ClientIndexMap, make_image_classification, stream_dirichlet_map,
+)
+from repro.fed import (
+    AvailabilitySampler, ClientPopulation, ClientStateStore, FedConfig,
+    UniformSampler, WeightedSampler, make_client_store, make_population,
+)
+from repro.models.vision import classification_loss, cnn_apply, init_cnn
+from repro.scenarios import PartitionSpec, cifar_like, materialize
+
+POP = 1_000_000
+
+
+@pytest.fixture(scope="module")
+def problem():
+    X, y = make_image_classification(600, image_size=8, n_classes=4, seed=0,
+                                     noise=1.0)
+    parts = stream_dirichlet_map(y, POP, alpha=0.3, samples_per_client=32,
+                                 seed=0)
+    params = init_cnn(jax.random.key(0), n_classes=4, width=4, blocks=1)
+
+    def loss_fn(p, batch):
+        return classification_loss(cnn_apply(p, batch["x"]), batch["y"])
+
+    def batch_fn(cid, rng):
+        idx = rng.choice(parts[cid], size=4)
+        return {"x": jnp.asarray(X[idx]), "y": jnp.asarray(y[idx])}
+
+    return params, loss_fn, batch_fn
+
+
+# ----------------------------------------------------------------- samplers
+
+def test_uniform_cohorts_distinct_in_range_and_deterministic():
+    pop = ClientPopulation(POP, seed=7)
+    c1 = pop.sample_cohort(3, 64)
+    c2 = pop.sample_cohort(3, 64)
+    assert np.array_equal(c1, c2)            # per-round reproducible
+    assert len(np.unique(c1)) == 64          # distinct
+    assert c1.min() >= 0 and c1.max() < POP
+    assert not np.array_equal(c1, pop.sample_cohort(4, 64))
+
+
+def test_uniform_small_space_is_permutation_slice():
+    pop = ClientPopulation(8, seed=0, sampler=UniformSampler())
+    c = pop.sample_cohort(0, 8)
+    assert sorted(c.tolist()) == list(range(8))
+
+
+def test_weighted_sampler_prefers_heavy_ids():
+    w = np.ones(100)
+    w[:5] = 1000.0
+    pop = ClientPopulation(100, seed=0,
+                           sampler=WeightedSampler(lambda ids: w[ids]))
+    hits = sum(int(c) < 5 for r in range(40)
+               for c in pop.sample_cohort(r, 5))
+    assert hits > 150   # ~199/200 expected under the weights; >75% is safe
+
+
+def test_availability_sampler_masks_ids():
+    avail = AvailabilitySampler(lambda ids, t: ids % 2 == 0)
+    pop = ClientPopulation(1000, seed=0, sampler=avail)
+    c = pop.sample_cohort(0, 16)
+    assert (c % 2 == 0).all()
+
+
+def test_client_rng_invariant_to_population_size():
+    small = ClientPopulation(50, seed=9)
+    large = ClientPopulation(POP, seed=9)
+    for cid in (0, 17, 49):
+        a = small.client_rng(cid, salt=3).integers(0, 2**31, 4)
+        b = large.client_rng(cid, salt=3).integers(0, 2**31, 4)
+        assert np.array_equal(a, b)
+        ka = jax.random.key_data(small.client_key(cid, salt=3))
+        kb = jax.random.key_data(large.client_key(cid, salt=3))
+        assert np.array_equal(np.asarray(ka), np.asarray(kb))
+
+
+def test_cohort_keys_match_per_client_keys():
+    pop = ClientPopulation(POP, seed=1)
+    cohort = pop.sample_cohort(0, 6)
+    stacked = pop.cohort_keys(cohort, salt=2)
+    for i, cid in enumerate(cohort):
+        assert np.array_equal(
+            np.asarray(jax.random.key_data(stacked[i])),
+            np.asarray(jax.random.key_data(pop.client_key(int(cid),
+                                                          salt=2))))
+
+
+def test_bad_ids_rejected():
+    pop = ClientPopulation(10, seed=0)
+    with pytest.raises(ValueError):
+        pop.sample_cohort(0, 11)
+    with pytest.raises(ValueError):
+        pop.client_rng(10)
+
+
+# -------------------------------------------------------------- state store
+
+def _store(tmp_path, budget=4, pop=100):
+    params = {"w": jnp.zeros((3, 2)), "b": jnp.zeros(2)}
+    proto = round_client_state_spec(resolve("scaffold"))
+    return ClientStateStore(proto, params, pop, budget,
+                            spill_dir=str(tmp_path)), proto, params
+
+
+def test_store_spill_restore_roundtrip_bitwise(tmp_path):
+    store, proto, _ = _store(tmp_path, budget=2)
+    (slot,) = store.acquire([11])
+    row = state_export(proto, store.state, int(slot))
+    marked = jax.tree.map(lambda x: x + 3.25, row)
+    store.state = state_import(proto, store.state, int(slot), marked)
+    store.acquire([5])     # fills the other slot
+    store.acquire([7])     # evicts 11 -> spill to disk
+    assert store.spills == 1
+    assert os.path.exists(os.path.join(str(tmp_path), f"client_{11:012d}.npz"))
+    (slot2,) = store.acquire([11])     # restore
+    back = state_export(proto, store.state, int(slot2))
+    for a, b in zip(jax.tree.leaves(marked), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert store.restores == 1
+
+
+def test_store_budget_and_peak(tmp_path):
+    store, _, _ = _store(tmp_path, budget=3)
+    with pytest.raises(ValueError):
+        store.acquire([1, 2, 3, 4])            # cohort > budget
+    with pytest.raises(ValueError):
+        store.acquire([1, 1])                  # duplicate ids
+    store.acquire([1, 2])
+    store.acquire([3])
+    assert store.peak_resident == 3 <= 3
+    store.acquire([4, 5, 6])
+    assert store.peak_resident == 3            # never exceeds budget
+    assert store.resident == 3
+
+
+def test_make_client_store_dense_identity(tmp_path):
+    from repro.fed import DenseClientStore
+    params = {"w": jnp.zeros(3)}
+    proto = round_client_state_spec(resolve("scaffold"))
+    assert make_client_store(None, params, 6) is None      # stateless algo
+    store = make_client_store(proto, params, 6, budget=6,
+                              spill_dir=str(tmp_path))
+    assert isinstance(store, DenseClientStore)             # budget covers pop
+    slots = store.acquire([4, 0, 2])
+    assert np.array_equal(slots, [4, 0, 2])                # identity slots
+    assert store.spills == 0
+
+
+def test_scaffold_export_import_only_touches_client_rows():
+    params = {"w": jnp.zeros((2, 2))}
+    state = SCAFFOLD_SPEC.client_state.init(params, 3)
+    row = SCAFFOLD_SPEC.client_state.client_export(state, 1)
+    # the exported row is the c_clients slice only — same structure as params
+    assert (jax.tree_util.tree_structure(row)
+            == jax.tree_util.tree_structure(params))
+    bumped = jax.tree.map(lambda x: x + 1.0, row)
+    out = SCAFFOLD_SPEC.client_state.client_import(state, 1, bumped)
+    np.testing.assert_array_equal(np.asarray(out.c_global["w"]),
+                                  np.asarray(state.c_global["w"]))
+    np.testing.assert_array_equal(np.asarray(out.c_clients["w"][1]),
+                                  np.asarray(state.c_clients["w"][1] + 1.0))
+
+
+# ------------------------------------------------------------ config knobs
+
+def test_fedconfig_population_validation():
+    with pytest.raises(ValueError):             # pop knobs without pop size
+        FedConfig(cohort_size=8)
+    with pytest.raises(ValueError):             # pop size needs cohort size
+        FedConfig(population_size=100)
+    with pytest.raises(ValueError):             # cohort > population
+        FedConfig(population_size=4, cohort_size=8)
+    with pytest.raises(ValueError):             # budget < cohort
+        FedConfig(population_size=100, cohort_size=8, state_budget=4)
+    with pytest.raises(ValueError):             # unknown sampler
+        FedConfig(population_size=100, cohort_size=8,
+                  cohort_sampler="nope")
+    cfg = FedConfig(population_size=100, cohort_size=8)
+    assert cfg.population_active
+    assert cfg.resolve_state_budget() == 32    # min(pop, 4 x cohort)
+    assert not FedConfig().population_active
+
+
+def test_make_population_from_config():
+    cfg = FedConfig(population_size=1234, cohort_size=8, seed=5)
+    pop = make_population(cfg)
+    assert pop.size == 1234
+    assert len(pop.sample_cohort(0, 8)) == 8
+
+
+# ------------------------------------------------- sparse-vs-dense, golden
+
+def _run_sync(problem, budget, rounds=3, tmp_path=None, **kw):
+    params, loss_fn, batch_fn = problem
+    exp = build_experiment(
+        "scaffold", params=params, loss_fn=loss_fn,
+        client_batch_fn=batch_fn, rounds=rounds, local_steps=2,
+        population_size=40, cohort_size=4, state_budget=budget,
+        spill_dir=None if tmp_path is None else str(tmp_path),
+        seed=0, **kw)
+    hist = exp.run()
+    return exp, hist
+
+
+def test_sync_sparse_bitwise_equals_dense_with_spill(problem, tmp_path):
+    # budget 4 (= cohort) forces evict/spill every round; budget 40 never
+    # spills — the training trajectory must be bitwise identical
+    _, h_sparse = _run_sync(problem, budget=4, tmp_path=tmp_path / "a")
+    _, h_dense = _run_sync(problem, budget=40, tmp_path=tmp_path / "b")
+    assert h_sparse[-1]["state_spills"] > 0
+    assert h_dense[-1]["state_spills"] == 0
+    for rs, rd in zip(h_sparse, h_dense):
+        assert rs["loss"] == rd["loss"]
+    assert h_sparse[-1]["state_peak"] <= 4
+
+
+def test_sync_population_invariant_to_population_size(problem):
+    # same cohort ids => same round results regardless of the id space
+    # around them; pin the cohort by sampling from the same seed/popsize
+    params, loss_fn, batch_fn = problem
+
+    def run(pop_size):
+        exp = build_experiment(
+            "fedavg", params=params, loss_fn=loss_fn,
+            client_batch_fn=batch_fn, rounds=1, local_steps=2,
+            population_size=pop_size, cohort_size=4, seed=0)
+        # force an identical cohort across population sizes
+        exp.population.sample_cohort = lambda r, k: np.array([3, 11, 25, 39])
+        return exp.run()[-1]["loss"]
+
+    assert run(40) == run(POP)
+
+
+def test_sharded_executor_matches_vmap(problem):
+    _, h_vmap = _run_sync(problem, budget=40, executor="vmap")
+    _, h_shard = _run_sync(problem, budget=40, executor="sharded",
+                           chunk_size=2)
+    for rv, rs in zip(h_vmap, h_shard):
+        assert np.isclose(rv["loss"], rs["loss"], rtol=1e-6)
+
+
+def _run_async(problem, budget, tmp_path=None):
+    params, loss_fn, batch_fn = problem
+    exp = build_experiment(
+        "fedavg", params=params, loss_fn=loss_fn, client_batch_fn=batch_fn,
+        rounds=3, local_steps=2, runtime="async", delta_codec="svd",
+        population_size=40, cohort_size=4, state_budget=budget,
+        spill_dir=None if tmp_path is None else str(tmp_path), seed=0,
+        async_cfg=AsyncConfig(buffer_size=2, concurrency=4))
+    hist = exp.run()
+    return exp, hist
+
+
+def test_async_sparse_bitwise_equals_dense_with_spill(problem, tmp_path):
+    # delta_codec="svd" activates error feedback -> the EF store is live
+    _, h_sparse = _run_async(problem, budget=4, tmp_path=tmp_path / "a")
+    _, h_dense = _run_async(problem, budget=40, tmp_path=tmp_path / "b")
+    assert h_sparse[-1]["state_spills"] > 0
+    for rs, rd in zip(h_sparse, h_dense):
+        assert rs["loss"] == rd["loss"]
+        assert rs["staleness"] == rd["staleness"]
+    assert h_sparse[-1]["state_peak"] <= 4
+
+
+def test_async_scheduler_uses_stable_global_ids(problem):
+    params, loss_fn, batch_fn = problem
+    exp = build_experiment(
+        "fedavg", params=params, loss_fn=loss_fn, client_batch_fn=batch_fn,
+        rounds=2, local_steps=1, runtime="async",
+        population_size=POP, cohort_size=4, seed=0,
+        async_cfg=AsyncConfig(buffer_size=2, concurrency=4))
+    exp.run()
+    seen = exp.scheduler._dispatch_counts.keys()
+    assert seen and all(0 <= cid < POP for cid in seen)
+    assert any(cid >= 40 for cid in seen)   # ids beyond any dense range
+
+
+# ------------------------------------------------------------ lazy scenario
+
+def test_stream_dirichlet_map_lazy_and_invariant():
+    y = np.repeat(np.arange(4), 25)
+    m_small = stream_dirichlet_map(y, 10, alpha=0.3, samples_per_client=16,
+                                   seed=2)
+    m_large = stream_dirichlet_map(y, POP, alpha=0.3, samples_per_client=16,
+                                   seed=2)
+    assert isinstance(m_large, ClientIndexMap) and len(m_large) == POP
+    for cid in (0, 9):
+        assert np.array_equal(m_small[cid], m_large[cid])
+    assert np.array_equal(m_large[123456], m_large[123456])
+    with pytest.raises(IndexError):
+        m_small[10]
+    stats = m_large.sample_stats(y)
+    assert stats["lazy"] and stats["n_clients"] == POP
+
+
+def test_stream_scenario_materializes_over_large_id_space():
+    spec = cifar_like(
+        model="cnn", n=600, image_size=8, n_classes=4, batch=8,
+        n_clients=POP, name="pop_test",
+        partition=PartitionSpec("stream_dirichlet", alpha=0.3,
+                                samples_per_client=16))
+    scn = materialize(spec, seed=0, n_clients=POP)
+    assert isinstance(scn.partitions, ClientIndexMap)
+    assert scn.partition_stats["lazy"]
+    b = scn.client_batch_fn(999_999, np.random.default_rng(0))
+    assert b["x"].shape[0] == 8
+
+
+def test_eager_scenarios_keep_list_partitions():
+    spec = cifar_like(model="cnn", n=600, image_size=8, n_classes=4,
+                      alpha=0.3, batch=8, n_clients=6, name="eager_test")
+    scn = materialize(spec, seed=0, n_clients=6)
+    assert isinstance(scn.partitions, list) and len(scn.partitions) == 6
+
+
+def test_legacy_dense_path_unchanged_by_population_code(problem):
+    # population_size=None must take the exact legacy path: no population,
+    # no store, no state_* telemetry keys
+    params, loss_fn, batch_fn = problem
+    exp = build_experiment("scaffold", params=params, loss_fn=loss_fn,
+                           client_batch_fn=batch_fn, n_clients=6,
+                           participation=0.5, rounds=2, local_steps=2,
+                           seed=0)
+    hist = exp.run()
+    assert exp.population is None
+    assert "state_peak" not in hist[-1]
