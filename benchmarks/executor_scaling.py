@@ -67,6 +67,9 @@ def _pop_rows(quick: bool):
     """
     import tempfile
 
+    from repro.obs import MemorySink, attach
+    from benchmarks.pipeline_bench import _phase_split
+
     cohorts = [256] if quick else [256, 1024, 10_000]
     spec = cifar_like(
         model="cnn", n=600, image_size=8, n_classes=4, batch=8,
@@ -83,7 +86,10 @@ def _pop_rows(quick: bool):
                 population_size=POPULATION, cohort_size=s,
                 state_budget=budget, spill_dir=spill, seed=0,
                 executor="sharded", chunk_size=min(64, s))
+            sink = MemorySink()
+            attach(exp, sink)
             us = _time_round(exp, iters=1)
+            split = _phase_split(sink, exp.server.round)
             rec = exp.history[-1]
         loss = float(rec["loss"])
         peak = int(rec["state_peak"])
@@ -99,7 +105,14 @@ def _pop_rows(quick: bool):
             "derived": {"backend": "sharded", "population": POPULATION,
                         "cohort": s, "state_budget": budget,
                         "peak_state_entries": peak, "spills": spills,
-                        "restores": restores, "loss": loss}})
+                        "restores": restores, "loss": loss,
+                        # host-phase wall split of the timed round (from
+                        # round-trace spans): where a pipelined round's
+                        # overlap headroom actually lives
+                        "stage_s": round(split.get("stage_batches", 0.0), 4),
+                        "acquire_s": round(split.get("state_acquire", 0.0),
+                                           4),
+                        "update_s": round(split.get("update", 0.0), 4)}})
     return rows
 
 
@@ -135,6 +148,10 @@ def run(quick: bool = True):
         rows.append({"name": f"exec_agree_S{s}", "us_per_call": 0.0,
                      "derived": {"cohort": s, "max_dev": dev}})
     rows.extend(_pop_rows(quick))
+    # pipelined-vs-serial population rounds ride in the same BENCH doc:
+    # the pipe_* rows are CI-pinned alongside the exec_*/pop_* rows
+    from benchmarks import pipeline_bench
+    rows.extend(pipeline_bench.run(quick))
     return rows
 
 

@@ -1,0 +1,143 @@
+"""Pipelined vs serial population rounds: the chunk-streaming round driver
+(``fed.pipeline``) against the monolithic staged round, swept over cohort
+size and pipeline chunk size on the streamed 10^6-id population.
+
+Both sides run the *same* memory-bounded configuration — ``chunked``
+executor, ``state_budget = 1.5 x cohort``, spill to disk — so the sweep
+isolates what the pipeline actually changes: staging/restore overlap with
+device compute, broadcast-filled fresh rows, write-behind spills, and the
+streamed (never cohort-stacked) wire aggregation.  The ``chunked`` backend
+is the apples-to-apples reference on a single-device host: the ``sharded``
+backend's one-device mesh adds pure shard_map dispatch overhead per call
+(see the ``exec_shard_map_*`` rows), which the pipeline would pay per
+*chunk*; on a real multi-device mesh the pipeline maps its chunks through
+``shard_map`` instead (``fed.pipeline._chunk_executor``).
+
+Emits ``pipe_serial_S<cohort>`` / ``pipe_c<chunk>_S<cohort>`` rows (us per
+round).  Serial rows carry the host-phase wall-time split recovered from
+round-trace spans (``stage_s``/``acquire_s``/``update_s``); pipelined rows
+carry the pipeline's own observability (``bubble`` — the fraction of round
+wall time the host spent blocked on staging/restores — plus the
+stage/restore wait split and the speedup against the same-cohort serial
+row).  The rows ride inside ``BENCH_executor.json`` via the exec_scaling
+job; CI pins the row names and asserts pipelined rounds are no slower
+than serial and that the S>=1024 bubble fraction stays under 0.5.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+
+from repro.api import build_experiment
+from repro.obs import MemorySink, attach
+from repro.scenarios import PartitionSpec, cifar_like, materialize
+from benchmarks.common import emit
+
+POPULATION = 1_000_000
+_SCN_CACHE = {}
+
+# stager threads time-slice against XLA compute threads, so on a
+# single-core host extra workers are pure contention (measured: 1 worker
+# 1.8x vs 4 workers 1.5x at S=1024); multi-core hosts get the default
+WORKERS = 1 if (os.cpu_count() or 1) == 1 else 4
+
+
+def _scenario():
+    if "scn" not in _SCN_CACHE:
+        spec = cifar_like(
+            model="cnn", n=600, image_size=8, n_classes=4, batch=8,
+            n_clients=POPULATION, name="pipe_pop",
+            partition=PartitionSpec("stream_dirichlet", alpha=0.3,
+                                    samples_per_client=32))
+        _SCN_CACHE["scn"] = materialize(spec, seed=0, n_clients=POPULATION)
+    return _SCN_CACHE["scn"]
+
+
+def _build(s, spill, **kw):
+    return build_experiment(
+        "scaffold", scenario=_scenario(), rounds=4, local_steps=2,
+        population_size=POPULATION, cohort_size=s,
+        state_budget=(3 * s) // 2, spill_dir=spill, seed=0,
+        executor="chunked", chunk_size=min(64, s), **kw)
+
+
+def _time_round(exp):
+    """Warm (compile) round, then one timed round, wall us."""
+    exp.run_round()
+    t0 = time.perf_counter()
+    exp.run_round()
+    jax.block_until_ready(exp.server.params)
+    return (time.perf_counter() - t0) * 1e6
+
+
+def _phase_split(sink, rnum):
+    """Sum span wall time per phase for round ``rnum``."""
+    tot = {}
+    for e in sink.events:
+        if e.get("event") == "span" and e.get("round") == rnum:
+            tot[e["phase"]] = tot.get(e["phase"], 0.0) + e["dur_s"]
+    return tot
+
+
+def _serial_row(s):
+    with tempfile.TemporaryDirectory(prefix="pipe_bench_") as spill:
+        exp = _build(s, spill)
+        sink = MemorySink()
+        attach(exp, sink)
+        us = _time_round(exp)
+        split = _phase_split(sink, exp.server.round)
+        rec = exp.history[-1]
+    derived = {"mode": "serial", "cohort": s,
+               "stage_s": round(split.get("stage_batches", 0.0), 4),
+               "acquire_s": round(split.get("state_acquire", 0.0), 4),
+               "update_s": round(split.get("update", 0.0), 4),
+               "loss": float(rec["loss"])}
+    emit(f"pipe_serial_S{s}", us,
+         f"stage={derived['stage_s']:.2f}s acquire={derived['acquire_s']:.2f}s "
+         f"update={derived['update_s']:.2f}s")
+    return {"name": f"pipe_serial_S{s}", "us_per_call": us,
+            "derived": derived}
+
+
+def _pipelined_row(s, chunk, serial_us):
+    with tempfile.TemporaryDirectory(prefix="pipe_bench_") as spill:
+        exp = _build(s, spill, pipeline=True, pipeline_chunk=chunk,
+                     pipeline_workers=WORKERS)
+        us = _time_round(exp)
+        rec = exp.history[-1]
+    speedup = serial_us / us
+    derived = {"mode": "pipelined", "cohort": s, "chunk": chunk,
+               "workers": WORKERS,
+               "chunks": int(rec["pipeline_chunks"]),
+               "bubble": round(float(rec["pipeline_bubble"]), 4),
+               "stage_wait_s": round(float(rec["pipeline_stage_wait_s"]), 4),
+               "restore_wait_s": round(float(rec["pipeline_restore_wait_s"]),
+                                       4),
+               "speedup_vs_serial": round(speedup, 3),
+               "loss": float(rec["loss"])}
+    emit(f"pipe_c{chunk}_S{s}", us,
+         f"speedup={speedup:.2f}x bubble={derived['bubble']:.3f}")
+    return {"name": f"pipe_c{chunk}_S{s}", "us_per_call": us,
+            "derived": derived}
+
+
+def run(quick: bool = True):
+    # quick (the CI-pinned set) keeps one chunk size per cohort and
+    # includes the S=1024 acceptance point; full sweeps the chunk axis
+    sweep = ({256: [64], 1024: [128]} if quick
+             else {256: [32, 64], 1024: [32, 64, 128, 256], 4096: [256]})
+    rows = []
+    for s, chunks in sweep.items():
+        serial = _serial_row(s)
+        rows.append(serial)
+        for c in chunks:
+            rows.append(_pipelined_row(s, c, serial["us_per_call"]))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(quick=True)

@@ -283,6 +283,56 @@ def make_local_update(spec: AlgorithmSpec, loss_fn: Callable,
     return local_fn
 
 
+def make_wire_client_step(spec: AlgorithmSpec, local_fn: Callable,
+                          transport: Optional[T.Transport],
+                          state_proto: Optional[ClientStateSpec], *,
+                          fused: bool) -> Callable:
+    """One client's round, from state view to wire message.
+
+    ``client_step(params, theta, g_global, beta, cstate, cid, batch_i,
+    key_i) -> (dchan, tmsg, out, loss)`` — the body ``build_round_fn``
+    vmaps over the cohort, factored out so the chunk-streaming pipeline
+    (``fed.pipeline``) traces the *identical* per-client computation
+    (parity between the two paths is bitwise, not just numeric).
+
+    The client-side encode is the wire boundary: what leaves the client IS
+    the wire msg.  The fused server path reduces wire messages directly,
+    so the decoded tree stays a client-local transient (it still forms the
+    EF residual); only the decode-then-aggregate fallback (``fused=False``,
+    mixing hooks) ships it server-side alongside the message.
+    """
+    ef_active = transport is not None and transport.feedback_active
+    has_algo_state = spec.client_state is not None
+    encode_theta = transport is not None and spec.align
+
+    def client_step(params, theta, g_global, beta, cstate, cid, batch_i,
+                    key_i):
+        view = (state_proto.client_view(cstate, cid)
+                if state_proto is not None else None)
+        if ef_active:
+            algo_view, residual = view if has_algo_state else (None, view)
+        else:
+            algo_view, residual = view, None
+        delta, theta_out, algo_out, loss = local_fn(
+            params, theta, g_global, beta=beta, view=algo_view,
+            batch_i=batch_i, key_i=key_i)
+        if transport is None:
+            return delta, theta_out, algo_out, loss
+        dmsg, decoded, new_residual = T.encode_with_feedback(
+            transport.delta, delta, residual)
+        dchan = (dmsg, decoded) if (ef_active and not fused) else dmsg
+        tmsg = (transport.theta.encode(theta_out) if encode_theta
+                else theta_out)
+        if ef_active:
+            out = ((algo_out, new_residual) if has_algo_state
+                   else new_residual)
+        else:
+            out = algo_out
+        return dchan, tmsg, out, loss
+
+    return client_step
+
+
 def state_export(proto: ClientStateSpec, state, cid):
     """One client's private state row (the unit the sparse population store
     spills to the checkpoint store).  Generic stacked-leaf slice unless the
@@ -314,11 +364,14 @@ def state_import_many(proto: ClientStateSpec, state, cids, rows):
     if proto.client_import_many is not None:
         return proto.client_import_many(state, cids, rows)
     if proto.client_import is not None:
+        # sequential fallback: host ids only (specs that want jit-traced
+        # grafts — the pipeline's in-step restore — override
+        # ``client_import_many``)
         for i, cid in enumerate(np.asarray(cids)):
             state = proto.client_import(
                 state, int(cid), jax.tree.map(lambda x: x[i], rows))
         return state
-    ids = jnp.asarray(np.asarray(cids))
+    ids = jnp.asarray(cids)   # may be traced: the pipeline grafts in-jit
     return jax.tree.map(lambda x, r: x.at[ids].set(r), state, rows)
 
 
@@ -440,6 +493,8 @@ def build_round_fn(
                                 server_lr=server_lr, align=spec.align)
     cohort_exec = make_cohort_executor(executor)
     local_fn = make_local_update(spec, loss_fn, opt, run)
+    client_step = make_wire_client_step(spec, local_fn, transport,
+                                        state_proto, fused=fused)
     # wire accounting is static shape math: captured at trace time and
     # reported host-side as an exact int (f32 metrics would round above
     # 2^24 bytes)
@@ -458,33 +513,8 @@ def build_round_fn(
             keys = jax.random.split(rng, s)
 
         def one_client(cid, batch_i, key_i):
-            view = (state_proto.client_view(cstate, cid)
-                    if state_proto is not None else None)
-            if ef_active:
-                algo_view, residual = view if has_algo_state else (None, view)
-            else:
-                algo_view, residual = view, None
-            delta, theta_out, algo_out, loss = local_fn(
-                params, theta, g_global, beta=ctrl.beta, view=algo_view,
-                batch_i=batch_i, key_i=key_i)
-            if transport is None:
-                return delta, theta_out, algo_out, loss
-            # client-side encode: what leaves the client IS the wire msg.
-            # The fused server path reduces wire messages directly, so the
-            # decoded tree stays a client-local transient (it still forms
-            # the EF residual); only the decode-then-aggregate fallback
-            # (mixing hooks) reuses it server-side.
-            dmsg, decoded, new_residual = T.encode_with_feedback(
-                transport.delta, delta, residual)
-            dchan = (dmsg, decoded) if (ef_active and not fused) else dmsg
-            tmsg = (transport.theta.encode(theta_out) if encode_theta
-                    else theta_out)
-            if ef_active:
-                out = ((algo_out, new_residual) if has_algo_state
-                       else new_residual)
-            else:
-                out = algo_out
-            return dchan, tmsg, out, loss
+            return client_step(params, theta, g_global, ctrl.beta, cstate,
+                               cid, batch_i, key_i)
 
         deltas, thetas, outs, losses = cohort_exec(
             one_client, cohort, batches, keys)

@@ -12,8 +12,8 @@ Layering (top to bottom):
 """
 from repro.core.engine.aggregation import (
     AggregationConfig, aggregate, aggregate_round, aggregate_wire,
-    advance_server, precond_mixing_weights, weighted_client_mean,
-    normalized_client_mean,
+    advance_server, finish_stream, precond_mixing_weights, stream_chunk,
+    weighted_client_mean, normalized_client_mean,
 )
 from repro.core.engine.geometry import (
     BETA_MAX_AUTO, GeometryController, auto_controller, fixed_controller,

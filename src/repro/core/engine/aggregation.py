@@ -106,6 +106,18 @@ def _finish_update(params, theta, g_global, delta_wsum, w,
     b = w.shape[0]
     rho = jnp.mean(w)                       # cohort freshness in (0, 1]
     denom = jnp.sum(w) + 1e-12
+    return _finish_update_stats(params, theta, g_global, delta_wsum, b, rho,
+                                denom, cfg, theta_stats)
+
+
+def _finish_update_stats(params, theta, g_global, delta_wsum, b, rho, denom,
+                         cfg: AggregationConfig, theta_stats):
+    """The Alg. 2 tail from *reduced* cohort statistics: ``b`` is the
+    (static) cohort size, ``rho``/``denom`` the freshness mean and weight
+    sum.  ``_finish_update`` derives them from the stacked weight vector;
+    the streamed pipeline derives them from its running ``w_sum`` — both
+    lower to the same sum/size expressions, so the split introduces no
+    numeric fork."""
     step = jax.tree.map(lambda x: x / b, delta_wsum)
     new_params = jax.tree.map(
         lambda p, d: (p.astype(jnp.float32)
@@ -215,6 +227,116 @@ def aggregate_wire(params, theta, g_global, dmsgs, weights,
                          theta_stats)
     step = jax.tree.map(lambda x: x / b, delta_wsum)
     return (*out, {"step": step, "thetas": thetas_dec})
+
+
+# ------------------------------------------------- streamed aggregation
+#
+# The chunk-streaming pipeline (fed.pipeline) never stacks the whole
+# cohort: each chunk's wire uploads fold into running f32 weighted sums
+# (``stream_chunk``, backed by the carry-accepting ``Codec.accumulate``)
+# and one ``finish_stream`` applies the Alg. 2 tail from the reduced
+# statistics.  A single-chunk stream with ``exact=True`` routes through
+# the very same expressions as ``aggregate_wire`` (carry=None accumulate,
+# classic drift), so it is bitwise-identical to the monolithic flush;
+# multi-chunk streams compute drift by the decomposition
+# mean_i ||Theta_i||^2 - ||mean_i Theta_i||^2 (clamped at 0) — the same
+# formula ``aggregate_wire`` already uses for lossy theta codecs.
+
+def stream_chunk(carry, dmsgs, weights, transport, *, tmsgs=None,
+                 thetas=None, exact: bool = False):
+    """Fold one chunk's uploads into the running aggregation carry.
+
+    carry: None for the first chunk (the accumulates then ARE the legacy
+    one-shot expressions), else the dict this function returned for the
+    previous chunk.  ``tmsgs``/``thetas`` mirror ``aggregate_wire``: theta
+    uploads as stacked wire messages or as an already-dense stacked tree.
+    ``exact=True`` is the single-chunk mode: drift comes out the classic
+    centered ``drift_metric`` for lossless/dense thetas (bitwise parity
+    with ``aggregate_wire``); it is invalid with a carry.
+    """
+    if tmsgs is not None and thetas is not None:
+        raise ValueError("pass theta uploads as tmsgs (wire) or thetas "
+                         "(dense), not both")
+    if exact and carry is not None:
+        raise ValueError("exact streaming is single-chunk only "
+                         "(carry must be None)")
+    w = weights.astype(jnp.float32)
+    b = w.shape[0]
+    prev = carry if carry is not None else {
+        "delta_wsum": None, "w_sum": None, "theta_wsum": None,
+        "theta_usum": None, "theta_sq_sum": None, "theta_drift": None}
+    out = dict(prev)
+    out["delta_wsum"] = transport.delta.accumulate(
+        dmsgs, w, carry=prev["delta_wsum"])
+    w_sum = jnp.sum(w)
+    out["w_sum"] = w_sum if prev["w_sum"] is None else prev["w_sum"] + w_sum
+    out["theta_drift"] = None
+
+    if tmsgs is not None:
+        if exact and transport.theta.lossless:
+            thetas_dec = jax.vmap(transport.theta.decode)(tmsgs)
+            out["theta_drift"] = drift_metric(thetas_dec)
+            out["theta_wsum"] = client_weighted_sum(thetas_dec, w)
+        else:
+            sq = transport.theta.sq_norms(tmsgs)
+            out["theta_sq_sum"] = _acc(prev["theta_sq_sum"], jnp.sum(sq))
+            out["theta_usum"] = transport.theta.accumulate(
+                tmsgs, jnp.ones((b,), jnp.float32),
+                carry=prev["theta_usum"])
+            out["theta_wsum"] = transport.theta.accumulate(
+                tmsgs, w, carry=prev["theta_wsum"])
+    elif thetas is not None:
+        if exact:
+            out["theta_drift"] = drift_metric(thetas)
+            out["theta_wsum"] = client_weighted_sum(thetas, w)
+        else:
+            flat = jax.tree.map(
+                lambda x: x.astype(jnp.float32).reshape(x.shape[0], -1),
+                thetas)
+            sq = sum(jnp.sum(x * x, axis=-1) for x in jax.tree.leaves(flat))
+            out["theta_sq_sum"] = _acc(prev["theta_sq_sum"], jnp.sum(sq))
+            out["theta_usum"] = _acc_tree(
+                prev["theta_usum"],
+                client_weighted_sum(thetas, jnp.ones((b,), jnp.float32)))
+            out["theta_wsum"] = _acc_tree(
+                prev["theta_wsum"], client_weighted_sum(thetas, w))
+    return out
+
+
+def _acc(prev, x):
+    return x if prev is None else prev + x
+
+
+def _acc_tree(prev, tree):
+    if prev is None:
+        return tree
+    return jax.tree.map(lambda a, c: a + c, prev, tree)
+
+
+def finish_stream(params, theta, g_global, carry, cohort_size: int,
+                  cfg: AggregationConfig):
+    """Apply the Alg. 2 tail to a fully-folded stream carry.
+
+    ``cohort_size`` is the static total cohort size b (the chunks'
+    leading dims sum to it).  Returns the same 4-tuple as ``aggregate``
+    plus an aux dict carrying the reusable weighted step.
+    """
+    b = int(cohort_size)
+    rho = carry["w_sum"] / b
+    denom = carry["w_sum"] + 1e-12
+    if carry["theta_wsum"] is None:
+        theta_stats = None
+    elif carry["theta_drift"] is not None:       # exact single-chunk path
+        theta_stats = (carry["theta_drift"], carry["theta_wsum"])
+    else:
+        usum = carry["theta_usum"]
+        ubar_sq = tree_norm_sq(jax.tree.map(lambda x: x / b, usum))
+        drift = jnp.maximum(carry["theta_sq_sum"] / b - ubar_sq, 0.0)
+        theta_stats = (drift, carry["theta_wsum"])
+    out = _finish_update_stats(params, theta, g_global, carry["delta_wsum"],
+                               b, rho, denom, cfg, theta_stats)
+    step = jax.tree.map(lambda x: x / b, carry["delta_wsum"])
+    return (*out, {"step": step})
 
 
 def advance_server(server: ServerState, params, theta, g_global, *,

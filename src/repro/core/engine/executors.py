@@ -28,6 +28,7 @@ the trade-off.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Optional
 
@@ -58,31 +59,34 @@ def _leading_dim(args) -> int:
     return jax.tree.leaves(args)[0].shape[0]
 
 
+@functools.lru_cache(maxsize=None)
 def _default_mesh():
+    # the local device set is fixed for the process lifetime, so the mesh
+    # is too — rebuilding it per executor call only burned host time
     return jax.make_mesh((len(jax.devices()),), ("data",))
 
 
 def _chunked_run(one_client, chunk_size: int, *args):
-    """Bounded-memory sequential ``lax.map`` over cohort slices: full chunks
-    scan through one compiled body, a remainder tail vmaps separately."""
+    """Bounded-memory sequential ``lax.map`` over cohort slices.
+
+    A cohort that is not a chunk multiple pads with replicas of its first
+    rows (pad < c <= s always holds) and the padded outputs are dropped,
+    so every cohort size runs through ONE compiled chunk body — the old
+    separate vmap tail compiled a fresh program for every distinct
+    remainder shape."""
     s = _leading_dim(args)
     c = min(chunk_size, s)
-    n_full = s // c
-    parts = []
-    if n_full:
-        head = jax.tree.map(
-            lambda x: x[: n_full * c].reshape(n_full, c, *x.shape[1:]),
-            args)
-        out = jax.lax.map(lambda a: jax.vmap(one_client)(*a), head)
-        parts.append(jax.tree.map(
-            lambda x: x.reshape(n_full * c, *x.shape[2:]), out))
-    if s - n_full * c:
-        tail = jax.tree.map(lambda x: x[n_full * c:], args)
-        parts.append(jax.vmap(one_client)(*tail))
-    if len(parts) == 1:
-        return parts[0]
-    return jax.tree.map(
-        lambda a, b: jnp.concatenate([a, b], axis=0), *parts)
+    n = -(-s // c)
+    pad = n * c - s
+    if pad:
+        args = jax.tree.map(
+            lambda x: jnp.concatenate([x, x[:pad]], axis=0), args)
+    chunks = jax.tree.map(lambda x: x.reshape(n, c, *x.shape[1:]), args)
+    out = jax.lax.map(lambda a: jax.vmap(one_client)(*a), chunks)
+    out = jax.tree.map(lambda x: x.reshape(n * c, *x.shape[2:]), out)
+    if pad:
+        out = jax.tree.map(lambda x: x[:s], out)
+    return out
 
 
 def _make_shard_runner(cfg: ExecutorConfig, shard_body_of):

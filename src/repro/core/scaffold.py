@@ -60,8 +60,9 @@ def _client_import(state: ScaffoldState, cid, row):
 
 
 def _client_import_many(state: ScaffoldState, cids, rows):
-    """Batched graft: one scatter into c_clients for a whole cohort."""
-    ids = jnp.asarray(np.asarray(cids))
+    """Batched graft: one scatter into c_clients for a whole cohort.
+    ``cids`` may be a traced array (the pipeline grafts inside jit)."""
+    ids = jnp.asarray(cids)
     return ScaffoldState(
         state.c_global,
         jax.tree.map(lambda c, r: c.at[ids].set(r), state.c_clients, rows))

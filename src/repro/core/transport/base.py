@@ -149,21 +149,33 @@ class Codec:
 
     # ------------------------------------------------- fused aggregation
 
-    def accumulate_leaf(self, msgs: LeafMsg, weights):
+    def accumulate_leaf(self, msgs: LeafMsg, weights, carry=None):
         """sum_i w_i * decode(msg_i) for one stacked leaf, in f32.
 
         Fallback: vmapped decode + the same ``dot_general`` contraction
         the dense engine path uses (``utils.tree.client_weighted_sum``),
         so a lossless codec's fused flush is bitwise-identical to
-        decode-then-aggregate."""
-        return client_weighted_sum(jax.vmap(self.decode_leaf)(msgs), weights)
+        decode-then-aggregate.
 
-    def accumulate(self, msgs: WireMsg, weights):
+        ``carry`` is a running partial sum from previous chunks of the
+        same cohort (the streaming pipeline's fold); ``carry=None`` keeps
+        the exact legacy single-shot expression — no zeros added — so a
+        one-chunk streamed round is bitwise-identical to the monolithic
+        flush."""
+        out = client_weighted_sum(jax.vmap(self.decode_leaf)(msgs), weights)
+        return out if carry is None else carry + out
+
+    def accumulate(self, msgs: WireMsg, weights, carry=None):
         """Fused decode-aggregate of a cohort-stacked message: the tree of
-        sum_i w_i * decode(msg_i).  weights: (B,)."""
+        sum_i w_i * decode(msg_i).  weights: (B,).  ``carry`` (a tree like
+        the decode target, from a previous chunk's accumulate) folds this
+        chunk into running partial sums; None is the one-shot flush."""
+        cleaves = (jax.tree.flatten(carry)[0] if carry is not None
+                   else [None] * len(msgs.leaves))
         return jax.tree.unflatten(
             msgs.treedef,
-            [self.accumulate_leaf(m, weights) for m in msgs.leaves])
+            [self.accumulate_leaf(m, weights, carry=c)
+             for m, c in zip(msgs.leaves, cleaves)])
 
     def sq_norms_leaf(self, msgs: LeafMsg):
         """(B,) squared Frobenius norm of each client's decoded leaf."""

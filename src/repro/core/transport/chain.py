@@ -52,8 +52,9 @@ class Chain(Codec):
             msgs = jax.vmap(codec.decode)(msgs)
         return msgs
 
-    def accumulate(self, msgs: WireMsg, weights):
-        return self.stages[0].accumulate(self._peel(msgs), weights)
+    def accumulate(self, msgs: WireMsg, weights, carry=None):
+        return self.stages[0].accumulate(self._peel(msgs), weights,
+                                         carry=carry)
 
     def sq_norms(self, msgs: WireMsg):
         return self.stages[0].sq_norms(self._peel(msgs))

@@ -86,11 +86,12 @@ class LowRankSVD(Codec):
         vt = msg.parts["vt"].astype(jnp.float32)
         return ((u * s[..., None, :]) @ vt).astype(msg.dtype)
 
-    def accumulate_leaf(self, msgs: LeafMsg, weights):
+    def accumulate_leaf(self, msgs: LeafMsg, weights, carry=None):
         if msgs.kind == "dense":
-            return super().accumulate_leaf(msgs, weights)
-        return fused_ops.lowrank_accumulate(
+            return super().accumulate_leaf(msgs, weights, carry=carry)
+        out = fused_ops.lowrank_accumulate(
             msgs.parts["u"], msgs.parts["s"], msgs.parts["vt"], weights)
+        return out if carry is None else carry + out
 
     def sq_norms_leaf(self, msgs: LeafMsg):
         if msgs.kind == "dense":
@@ -142,11 +143,12 @@ class PowerSketch(Codec):
         b = msg.parts["b"].astype(jnp.float32)
         return (q @ b).astype(msg.dtype)
 
-    def accumulate_leaf(self, msgs: LeafMsg, weights):
+    def accumulate_leaf(self, msgs: LeafMsg, weights, carry=None):
         if msgs.kind == "dense":
-            return super().accumulate_leaf(msgs, weights)
-        return fused_ops.sketch_accumulate(
+            return super().accumulate_leaf(msgs, weights, carry=carry)
+        out = fused_ops.sketch_accumulate(
             msgs.parts["q"], msgs.parts["b"], weights)
+        return out if carry is None else carry + out
 
     def sq_norms_leaf(self, msgs: LeafMsg):
         if msgs.kind == "dense":

@@ -72,15 +72,16 @@ class QBlock(Codec):
             q = jnp.pad(q, ((0, 0), (0, pad)))
         return q.reshape(b, nb, block), scale
 
-    def accumulate_leaf(self, msgs: LeafMsg, weights):
+    def accumulate_leaf(self, msgs: LeafMsg, weights, carry=None):
         if msgs.kind == "dense":
-            return super().accumulate_leaf(msgs, weights)
+            return super().accumulate_leaf(msgs, weights, carry=carry)
         q3, scale = self._stacked_blocks(msgs)
         out = fused_ops.dequant_accumulate(
             q3, scale, weights, use_pallas=self.use_pallas,
             interpret=self.interpret)
         n = math.prod(msgs.shape)
-        return out.reshape(-1)[:n].reshape(msgs.shape)
+        out = out.reshape(-1)[:n].reshape(msgs.shape)
+        return out if carry is None else carry + out
 
     def sq_norms_leaf(self, msgs: LeafMsg):
         if msgs.kind == "dense":

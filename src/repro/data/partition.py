@@ -25,6 +25,7 @@ deliberately relaxed: it cannot hold with more clients than samples.
 from __future__ import annotations
 
 import warnings
+import threading
 from collections import OrderedDict
 from typing import Callable
 
@@ -198,6 +199,9 @@ class ClientIndexMap:
         self._fn = fn
         self._cache: OrderedDict[int, np.ndarray] = OrderedDict()
         self._cache_size = int(cache_size)
+        # concurrent stager workers (fed.pipeline) query the map from
+        # multiple threads; the LRU bookkeeping must not race
+        self._lock = threading.Lock()
 
     def __len__(self) -> int:
         return self.n_clients
@@ -207,14 +211,16 @@ class ClientIndexMap:
         if not 0 <= cid < self.n_clients:
             raise IndexError(
                 f"client id {cid} outside id space [0, {self.n_clients})")
-        hit = self._cache.get(cid)
-        if hit is not None:
-            self._cache.move_to_end(cid)
-            return hit
+        with self._lock:
+            hit = self._cache.get(cid)
+            if hit is not None:
+                self._cache.move_to_end(cid)
+                return hit
         idx = np.asarray(self._fn(cid), dtype=np.int64)
-        self._cache[cid] = idx
-        if len(self._cache) > self._cache_size:
-            self._cache.popitem(last=False)
+        with self._lock:
+            self._cache[cid] = idx
+            if len(self._cache) > self._cache_size:
+                self._cache.popitem(last=False)
         return idx
 
     client_indices = __getitem__

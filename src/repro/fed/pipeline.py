@@ -1,0 +1,371 @@
+"""Chunk-streaming pipelined population rounds.
+
+The monolithic population round serializes three phases: stage the whole
+cohort's batches on host, restore/materialize every cold state row, then
+launch one device program over the full (S, K, ...) stack.  This module
+splits the cohort into deterministic ordered chunks and turns the round
+into a software pipeline:
+
+  * a background stager (thread pool) fills chunk i+1's batches into
+    preallocated double-buffered host arrays (``StagingBuffers``) while
+    chunk i's device program runs (JAX async dispatch — the chunk call
+    returns before the device finishes);
+  * the sparse state store prefetches chunk i+1's cold rows
+    (``ClientStateStore.prefetch``) on its I/O workers and spills evicted
+    rows write-behind, so restores are host-cache hits by the time a chunk
+    needs them;
+  * each chunk's wire uploads fold into the running f32 weighted sums
+    (``engine.stream_chunk``, backed by the carry-accepting
+    ``Codec.accumulate``) and one jitted ``finish_stream`` applies the
+    Alg. 2 tail — the full-cohort wire stack never materializes, so peak
+    memory is chunk-proportional.
+
+Parity is exact by construction, not approximate: a single-chunk pipeline
+(``pipeline_chunk >= cohort_size``) folds with ``carry=None`` and
+``exact=True``, which routes through the very same contraction order as
+the legacy fused round — bitwise-identical, jitted-vs-jitted.  Multi-chunk
+streams are bitwise-reproducible for a fixed chunk size and identical
+across stager worker counts (each client's batches derive from its own
+``(seed, client_id, salt)`` stream and land in its own buffer row).
+
+Client-state semantics under chunking: chunks read the *round-start*
+state (plus their own restored rows) and write into a separate
+``write_state`` — chunk boundaries are not extra communication rounds.
+Chunks own disjoint slot sets, so per-chunk ``server_update`` scatters
+never collide, and evolving shared globals (SCAFFOLD's ``c_global`` sum)
+telescope to the cohort total.  ``write_state``, the stream carry, and the
+running loss are *donated* back to each chunk step, so the round updates
+them in place instead of copying per chunk.
+
+The pipeline is a population-mode, sync-runtime feature behind
+``FedConfig.pipeline``; algorithms with a ``mixing`` hook need the decoded
+cohort stack and keep the legacy serial round (``fed.rounds`` warns and
+falls back).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import transport as T
+from repro.core.algorithms import (
+    make_local_update, make_wire_client_step, round_client_state_spec,
+    state_import_many, zero_theta,
+)
+from repro.core.client import LocalRunConfig
+from repro.core.engine import (
+    AggregationConfig, BETA_MAX_AUTO, ExecutorConfig, advance_server,
+    finish_stream, make_cohort_executor, make_controller, stream_chunk,
+    update_controller,
+)
+from repro.fed.staging import (
+    StagingBuffers, _stack_steps, serialized_unless_thread_safe,
+)
+
+_BUF = "pipe"   # StagingBuffers tag; keyed with the parity -> two trees
+
+
+def _chunk_executor(cfg: ExecutorConfig):
+    """The per-chunk executor for a config: the chunk IS the memory bound,
+    so the scanning backends collapse to one vmap over the chunk; the
+    sharded backends keep their mesh (a chunk spreads over devices)."""
+    if cfg.backend in ("vmap", "chunked"):
+        return make_cohort_executor(ExecutorConfig(backend="vmap"))
+    return make_cohort_executor(
+        dataclasses.replace(cfg, backend="shard_map"))
+
+
+class RoundPipeline:
+    """Chunk-streaming round driver bound to one ``FederatedExperiment``.
+
+    Built by the experiment when ``fed.pipeline`` is set; ``run_round()``
+    replaces the monolithic round-fn call and returns the same metrics
+    dict plus pipeline observability: ``pipeline_bubble`` (fraction of the
+    round wall time the host spent *blocked* waiting on staging/restores
+    — the pipeline's figure of merit), chunk count, and the stage/restore
+    wait split.
+    """
+
+    def __init__(self, exp):
+        fed = exp.fed
+        spec = exp.spec
+        if not fed.population_active:
+            raise ValueError("RoundPipeline requires population mode")
+        if spec.mixing is not None:
+            raise ValueError(
+                f"algorithm {spec.name!r} has a mixing hook (needs the "
+                "decoded cohort stack); the chunk-streaming pipeline "
+                "cannot serve it — use the serial round")
+        self.exp = exp
+        self.fed = fed
+        self.spec = spec
+        self.opt = exp.opt
+        self.transport = exp.transport
+        self.cohort_size = fed.cohort_size
+        self.chunk = max(1, min(fed.pipeline_chunk, fed.cohort_size))
+        self.bounds = tuple(
+            (a, min(a + self.chunk, self.cohort_size))
+            for a in range(0, self.cohort_size, self.chunk))
+        self.exact = len(self.bounds) == 1
+        self.workers = fed.pipeline_workers
+        self.local_steps = fed.local_steps
+        self.n_clients = fed.population_size
+        self.encode_theta = spec.align     # transport is always present here
+        self.state_proto = round_client_state_spec(spec, exp.transport)
+
+        beta = spec.resolve_beta(fed.beta)
+        self.default_ctrl = make_controller(beta, correct=spec.correct,
+                                            beta_max=BETA_MAX_AUTO)
+        run = LocalRunConfig(lr=exp.lr, local_steps=fed.local_steps,
+                             beta=0.0, hessian_freq=fed.hessian_freq,
+                             align=spec.align)
+        self.agg_cfg = AggregationConfig(lr=exp.lr,
+                                         local_steps=fed.local_steps,
+                                         server_lr=fed.server_lr,
+                                         align=spec.align)
+        local_fn = make_local_update(spec, exp.loss_fn, exp.opt, run)
+        self.client_step = make_wire_client_step(
+            spec, local_fn, exp.transport, self.state_proto, fused=True)
+        self.chunk_exec = _chunk_executor(fed.executor_config())
+
+        self.batch_fn = serialized_unless_thread_safe(exp.client_batch_fn)
+        self.stager = ThreadPoolExecutor(max_workers=self.workers,
+                                         thread_name_prefix="repro-stager")
+        self.sbufs = StagingBuffers()
+        if exp.state_store is not None:
+            exp.state_store.enable_async_io(workers=2)
+
+        # wire accounting: static shape math captured at trace time, keyed
+        # by chunk length (the tail chunk is its own program)
+        self._wire_cell: dict = {}
+        # first chunk: write_state still aliases the store's live buffers
+        # (read_state == write_state == round-start state), so nothing is
+        # donated; later chunks own their write_state/carry/loss buffers
+        # (every in-tree server_update scatters or recomputes each leaf,
+        # so chunk 1's outputs share no buffer with the live store) and
+        # donate them back for in-place reuse
+        self._first = jax.jit(self._chunk_first)
+        self._next = jax.jit(self._chunk_next, donate_argnums=(5, 6, 7))
+        # the finish step runs once per round and folds the carry into
+        # scalars + params-sized outputs; donating it would only save one
+        # small copy while warning about the unusable theta_usum leaves
+        self._finish = jax.jit(self._finish_impl)
+
+    # ------------------------------------------------------------ jit steps
+
+    def _chunk_body(self, params, theta, g_global, beta, read_state,
+                    write_state, carry, loss_sum, slots, pend, batches,
+                    keys):
+        proto = self.state_proto
+        if proto is not None and pend is not None:
+            # graft this chunk's restored rows into BOTH states: reads see
+            # them (client_view) and server_updates that leave a row
+            # partially untouched must not lose them.  The read graft is
+            # *internal* to this chunk's program — chunks own disjoint
+            # slot sets, so no later chunk ever reads these rows, and the
+            # round-start ``read_state`` never round-trips through jit
+            # (returning it would copy the whole budget-sized state every
+            # chunk; the write graft rides the donated buffer instead).
+            pslots, rows = pend
+            read_state = state_import_many(proto, read_state, pslots, rows)
+            write_state = state_import_many(proto, write_state, pslots,
+                                            rows)
+
+        def one_client(cid, batch_i, key_i):
+            return self.client_step(params, theta, g_global, beta,
+                                    read_state, cid, batch_i, key_i)
+
+        dmsgs, tmsgs, outs, losses = self.chunk_exec(
+            one_client, slots, batches, keys)
+        b = losses.shape[0]
+        up = T.wire_bytes(dmsgs)
+        if self.encode_theta:
+            up += T.wire_bytes(tmsgs)
+        self._wire_cell[int(b)] = up
+        w = jnp.ones((b,), jnp.float32)
+        carry = stream_chunk(carry, dmsgs, w, self.transport,
+                             tmsgs=tmsgs if self.encode_theta else None,
+                             thetas=None if self.encode_theta else tmsgs,
+                             exact=self.exact)
+        ls = jnp.sum(losses)
+        loss_sum = ls if loss_sum is None else loss_sum + ls
+        if proto is not None:
+            write_state = proto.server_update(write_state, slots, outs,
+                                              self.n_clients)
+        return write_state, carry, loss_sum
+
+    def _chunk_first(self, params, theta, g_global, beta, read_state,
+                     write_state, slots, pend, batches, keys):
+        return self._chunk_body(params, theta, g_global, beta, read_state,
+                                write_state, None, None, slots, pend,
+                                batches, keys)
+
+    def _chunk_next(self, params, theta, g_global, beta, read_state,
+                    write_state, carry, loss_sum, slots, pend, batches,
+                    keys):
+        return self._chunk_body(params, theta, g_global, beta, read_state,
+                                write_state, carry, loss_sum, slots, pend,
+                                batches, keys)
+
+    def _finish_impl(self, params, theta, g_global, ctrl, carry, loss_sum):
+        p, th, g, metrics, _aux = finish_stream(
+            params, theta, g_global, carry, self.cohort_size, self.agg_cfg)
+        new_ctrl = update_controller(ctrl, metrics["norm_drift"],
+                                     metrics["freshness"])
+        metrics = dict(metrics, loss=loss_sum / self.cohort_size,
+                       beta=ctrl.beta)
+        return p, th, g, new_ctrl, metrics
+
+    # ------------------------------------------------------------- staging
+
+    def _submit_stage(self, cohort, bounds, parity, salt):
+        """Fan one chunk's clients out over the stager pool: round-robin
+        slices write disjoint buffer rows, so completion order cannot
+        change the staged values (worker-count determinism)."""
+        a, b = bounds
+        ids = [int(c) for c in cohort[a:b]]
+        n = b - a
+        n_tasks = max(1, min(self.workers, n))
+        futs = []
+        for w in range(n_tasks):
+            offs = list(range(w, n, n_tasks))
+            futs.append(self.stager.submit(
+                self._stage_slice, [ids[o] for o in offs], offs, parity,
+                n, salt))
+        return futs
+
+    def _stage_slice(self, ids, offs, parity, n, salt):
+        pop = self.exp.population
+        for cid, off in zip(ids, offs):
+            row = _stack_steps(self.batch_fn, cid, self.local_steps,
+                               pop.client_rng(cid, salt))
+            buf = self.sbufs.get((_BUF, parity), n, row)
+            StagingBuffers.fill_row(buf, off, row)
+
+    def _finish_stage(self, futs, parity, n):
+        for f in futs:
+            f.result()               # propagate stager exceptions
+        return jax.tree.map(jnp.asarray, self.sbufs.peek((_BUF, parity), n))
+
+    @staticmethod
+    def _pad_pend(pslots, rows, n):
+        """Pad a chunk's pending (slots, rows) to the chunk length so every
+        pending-count compiles to ONE program: padding replicates row 0,
+        and duplicate scatter indices carrying identical rows are a
+        well-defined no-op on the result."""
+        k = len(pslots)
+        if k < n:
+            reps = np.concatenate(
+                [np.arange(k, dtype=np.int64), np.zeros(n - k, np.int64)])
+            pslots = np.asarray(pslots)[reps]
+            rows = jax.tree.map(lambda x: np.asarray(x)[reps], rows)
+        return jnp.asarray(np.asarray(pslots)), jax.tree.map(jnp.asarray,
+                                                             rows)
+
+    # ------------------------------------------------------------ the round
+
+    def run_round(self) -> dict:
+        """One pipelined round; advances the experiment's server/state and
+        returns the metrics dict (same keys as the serial round, plus the
+        ``pipeline_*`` observability fields)."""
+        exp = self.exp
+        t = exp.tracer
+        pop = exp.population
+        store = exp.state_store
+        rnum = exp.server.round + 1
+        ridx = rnum - 1                 # staging salt, as in the serial path
+        S = self.cohort_size
+        t_round = time.perf_counter()
+
+        with t.span("staging", round=rnum):
+            cohort = pop.sample_cohort(ridx, S)
+            with t.span("state_acquire", round=rnum):
+                slots = (store.acquire(cohort, defer_restore=True)
+                         if store is not None else np.asarray(cohort))
+            keys = pop.cohort_keys(cohort, salt=ridx)
+
+        server = exp.server
+        ctrl = (server.geom if server.geom is not None
+                else self.default_ctrl)
+        theta = server.theta
+        if self.spec.align and theta is None:
+            # round 0: no reference yet -> align to the fresh (zero) state
+            theta = zero_theta(self.opt, server.params)
+        params, g_global = server.params, server.g_global
+
+        read_state = store.state if store is not None else None
+        write_state = read_state
+        carry = loss_sum = None
+        stage_wait = restore_wait = 0.0
+
+        stage_futs = {0: self._submit_stage(cohort, self.bounds[0], 0,
+                                            ridx)}
+        if store is not None:
+            a0, b0 = self.bounds[0]
+            store.prefetch(cohort[a0:b0])
+
+        for ci, (a, b) in enumerate(self.bounds):
+            if ci + 1 < len(self.bounds):
+                # chunk i+1 stages and prefetches while chunk i computes
+                stage_futs[ci + 1] = self._submit_stage(
+                    cohort, self.bounds[ci + 1], (ci + 1) % 2, ridx)
+                if store is not None:
+                    na, nb = self.bounds[ci + 1]
+                    store.prefetch(cohort[na:nb])
+            tw = time.perf_counter()
+            with t.span("chunk_stage", round=rnum, chunk=ci):
+                batches = self._finish_stage(stage_futs.pop(ci), ci % 2,
+                                             b - a)
+            stage_wait += time.perf_counter() - tw
+            pend = None
+            tw = time.perf_counter()
+            if store is not None:
+                with t.span("chunk_restore", round=rnum, chunk=ci):
+                    got = store.collect_pending(cohort[a:b])
+                    if got is not None:
+                        pend = self._pad_pend(*got, b - a)
+            restore_wait += time.perf_counter() - tw
+            chunk_slots = jnp.asarray(slots[a:b])
+            chunk_keys = keys[a:b]
+            # async dispatch: the span times the *launch*; device work
+            # overlaps the next chunk's staging and the flush span blocks
+            with t.span("chunk_compute", round=rnum, chunk=ci):
+                if carry is None:
+                    write_state, carry, loss_sum = self._first(
+                        params, theta, g_global, ctrl.beta, read_state,
+                        write_state, chunk_slots, pend, batches,
+                        chunk_keys)
+                else:
+                    write_state, carry, loss_sum = self._next(
+                        params, theta, g_global, ctrl.beta, read_state,
+                        write_state, carry, loss_sum, chunk_slots, pend,
+                        batches, chunk_keys)
+
+        with t.span("flush", round=rnum):
+            p, th, g, new_ctrl, metrics = self._finish(
+                params, theta, g_global, ctrl, carry, loss_sum)
+            jax.block_until_ready(p)
+
+        if store is not None:
+            store.state = write_state
+            store.flush_io()
+        exp.client_state = write_state
+        exp.server = advance_server(server, p, th, g, geom=new_ctrl,
+                                    aligned=self.spec.align)
+
+        total_bytes = sum(self._wire_cell[b - a] for a, b in self.bounds)
+        wall = time.perf_counter() - t_round
+        bubble = (stage_wait + restore_wait) / max(wall, 1e-9)
+        return dict(metrics,
+                    upload_bytes=total_bytes // S,
+                    upload_total_bytes=total_bytes, cohort_size=S,
+                    pipeline_chunks=len(self.bounds),
+                    pipeline_chunk_size=self.chunk,
+                    pipeline_bubble=bubble,
+                    pipeline_stage_wait_s=stage_wait,
+                    pipeline_restore_wait_s=restore_wait)

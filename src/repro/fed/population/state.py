@@ -25,11 +25,34 @@ Algorithm semantics stay population-true: ``server_update`` still receives
 shared globals (``c_global``) live resident in the stacked state — only
 private rows (declared via ``ClientStateSpec.client_export/client_import``)
 travel to disk.
+
+Streaming extensions (the chunk pipeline, ``fed.pipeline``)
+-----------------------------------------------------------
+
+``acquire(ids, defer_restore=True)`` assigns slots but *defers* row
+materialization: the missing clients park in a pending set the caller
+drains chunk-by-chunk with ``collect_pending`` (one batched host buffer
+per chunk — fresh rows broadcast-filled, restored rows grafted in place).
+Around it:
+
+* evictions within one acquire batch into a single *group* .npz (one
+  batched export gather + one file) written **behind** the round by the
+  store's I/O workers (``enable_async_io``) — the synchronous per-client
+  save leaves the critical path;
+* ``prefetch(ids)`` warms upcoming chunks' spill archives into a host
+  cache from the same workers;
+* rows whose group save is still in flight restore straight from the
+  in-memory export (never from a half-written file), so the spill →
+  restore round-trip stays byte-identical.
+
+The classic eager ``acquire`` path is untouched — serial rounds keep
+their exact per-client spill/restore behavior and file layout.
 """
 from __future__ import annotations
 
 import os
 import tempfile
+import threading
 from collections import OrderedDict
 from typing import Optional
 
@@ -66,10 +89,34 @@ class DenseClientStore:
     def peak_resident(self) -> int:
         return len(self._touched)
 
-    def acquire(self, ids) -> np.ndarray:
+    def acquire(self, ids, defer_restore: bool = False) -> np.ndarray:
+        del defer_restore      # every row is always resident: nothing pends
         ids = np.asarray(ids, np.int64)
         self._touched.update(int(c) for c in ids)
         return ids
+
+    # streaming no-ops: the dense store has nothing to restore or spill
+    def enable_async_io(self, workers: int = 2):
+        return self
+
+    def prefetch(self, ids) -> None:
+        pass
+
+    def collect_pending(self, ids):
+        return None
+
+    def flush_io(self) -> None:
+        pass
+
+
+class _Done:
+    """Resolved-future stand-in for the synchronous (no-worker) I/O path."""
+
+    def __init__(self, value=None):
+        self._value = value
+
+    def result(self):
+        return self._value
 
 
 class ClientStateStore:
@@ -96,10 +143,25 @@ class ClientStateStore:
         os.makedirs(self.spill_dir, exist_ok=True)
         self._slot_of: "OrderedDict[int, int]" = OrderedDict()  # LRU order
         self._free = list(range(budget - 1, -1, -1))
-        self._spilled: set = set()
+        self._spilled: set = set()          # per-client .npz (eager path)
         self.spills = 0
         self.restores = 0
         self.peak_resident = 0
+        # ---- streaming state (deferred acquire / write-behind groups)
+        self._io = None                     # ThreadPoolExecutor when enabled
+        self._io_lock = threading.Lock()
+        self._pending: "OrderedDict[int, int]" = OrderedDict()  # cid -> slot
+        self._group_of: dict = {}           # cid -> (path, row index)
+        self._group_live: dict = {}         # path -> set of unrestored cids
+        self._group_rows: dict = {}         # path -> row count (template)
+        self._inflight: dict = {}           # cid -> (path, stacked rows, idx)
+        self._save_futs: dict = {}          # path -> save future
+        self._archive_futs: dict = {}       # path -> prefetch-load future
+        self._archive_cache: dict = {}      # path -> host row-stack tree
+        self._row_futs: dict = {}           # cid -> per-client load future
+        self._cleanup_futs: list = []
+        self._group_seq = 0
+        self._fresh_host = None             # lazy np view of self._fresh
 
     # ------------------------------------------------------------- plumbing
 
@@ -127,10 +189,15 @@ class ClientStateStore:
 
     # -------------------------------------------------------------- acquire
 
-    def acquire(self, ids) -> np.ndarray:
+    def acquire(self, ids, defer_restore: bool = False) -> np.ndarray:
         """Slot indices for a cohort of global client ids, materializing/
         restoring rows as needed.  The round_fn gathers views and scatters
-        updates by these slots; the mapping persists until eviction."""
+        updates by these slots; the mapping persists until eviction.
+
+        ``defer_restore=True`` (the chunk pipeline) assigns slots without
+        touching ``self.state``: missing rows pend until the caller drains
+        them chunk-wise with ``collect_pending`` and grafts them itself;
+        evictions batch into one write-behind group spill."""
         ids = np.asarray(ids, np.int64)
         if len(ids) > self.budget:
             raise ValueError(
@@ -139,6 +206,8 @@ class ClientStateStore:
         incoming = {int(c) for c in ids}
         if len(incoming) != len(ids):
             raise ValueError("acquire wants distinct client ids")
+        if defer_restore:
+            return self._acquire_deferred(ids, incoming)
         slots = np.empty(len(ids), np.int64)
         # two-pass: collect every missing client's (slot, row), then graft
         # them in ONE batched scatter — per-client functional .at[].set
@@ -159,6 +228,11 @@ class ClientStateStore:
                 self._spilled.discard(cid)
                 os.unlink(self._spill_path(cid))
                 self.restores += 1
+            elif cid in self._group_of:
+                # spilled by a pipelined round's group file: restore from
+                # the archive (or the still-in-flight in-memory export)
+                row = self._row_from_group(cid)
+                self.restores += 1
             else:
                 row = self._fresh               # first selection: zero-init
             miss_slots.append(slot)
@@ -172,6 +246,231 @@ class ClientStateStore:
                 stacked)
         self.peak_resident = max(self.peak_resident, len(self._slot_of))
         return slots
+
+    # ----------------------------------------------- streaming: deferred
+
+    def enable_async_io(self, workers: int = 2):
+        """Run spill writes and restore reads on background threads.
+        Without this every streaming I/O hook runs synchronously (correct,
+        just not overlapped)."""
+        if self._io is None and workers > 0:
+            from concurrent.futures import ThreadPoolExecutor
+            self._io = ThreadPoolExecutor(
+                max_workers=int(workers),
+                thread_name_prefix="repro-state-io")
+        return self
+
+    def _submit(self, fn, *args):
+        if self._io is None:
+            return _Done(fn(*args))
+        return self._io.submit(fn, *args)
+
+    def _acquire_deferred(self, ids, incoming) -> np.ndarray:
+        if self._pending:
+            raise RuntimeError(
+                "acquire(defer_restore=True) with rows still pending — "
+                "drain the previous cohort with collect_pending first")
+        slots = np.empty(len(ids), np.int64)
+        missing = []                        # (position, cid)
+        for i, cid in enumerate(int(c) for c in ids):
+            if cid in self._slot_of:
+                self._slot_of.move_to_end(cid)      # touch
+                slots[i] = self._slot_of[cid]
+            else:
+                missing.append((i, cid))
+        evicted = []                        # (cid, slot) this acquire spills
+        for i, cid in missing:
+            if self._free:
+                slot = self._free.pop()
+            else:
+                vcid, slot = self._evict_candidate(incoming)
+                evicted.append((vcid, slot))
+            self._slot_of[cid] = slot
+            self._pending[cid] = slot
+            slots[i] = slot
+        if evicted:
+            self._spill_group(evicted)
+        self.peak_resident = max(self.peak_resident, len(self._slot_of))
+        return slots
+
+    def _evict_candidate(self, protected: set):
+        """Pop the LRU resident not in the incoming cohort (no I/O here —
+        the caller batches the group spill)."""
+        for cid in self._slot_of:
+            if cid not in protected:
+                return cid, self._slot_of.pop(cid)
+        raise RuntimeError(
+            f"cannot evict: all {self.budget} resident clients are in the "
+            "incoming cohort (state budget must be >= cohort size)")
+
+    def _spill_group(self, evicted) -> None:
+        """One batched export of every slot this acquire evicts + one
+        write-behind .npz for the whole group."""
+        cids = [c for c, _ in evicted]
+        slots = jnp.asarray(np.asarray([s for _, s in evicted], np.int64))
+        # one batched gather instead of per-client state_export slices
+        rows = jax.vmap(
+            lambda s: state_export(self.proto, self.state, s))(slots)
+        path = os.path.join(self.spill_dir,
+                            f"group_{self._group_seq:08d}.npz")
+        self._group_seq += 1
+        self._group_live[path] = set(cids)
+        self._group_rows[path] = len(cids)
+        with self._io_lock:
+            for idx, cid in enumerate(cids):
+                self._group_of[cid] = (path, idx)
+                self._inflight[cid] = (path, rows, idx)
+        self.spills += len(cids)
+
+        def _save():
+            host = jax.tree.map(np.asarray, rows)
+            save_pytree(host, path)
+            with self._io_lock:
+                for cid in cids:
+                    entry = self._inflight.get(cid)
+                    if entry is not None and entry[0] == path:
+                        del self._inflight[cid]
+
+        self._save_futs[path] = self._submit(_save)
+
+    def _group_template(self, path: str):
+        k = self._group_rows[path]
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((k, *np.shape(x)),
+                                           jnp.dtype(x.dtype)), self._fresh)
+
+    def _load_group(self, path: str):
+        return jax.tree.map(np.asarray,
+                            load_pytree(self._group_template(path), path))
+
+    def _archive(self, path: str):
+        """The host row-stack of a group file, from the prefetch cache or a
+        synchronous load (waiting out an in-flight save first)."""
+        fut = self._archive_futs.pop(path, None)
+        if fut is not None:
+            self._archive_cache[path] = fut.result()
+        arch = self._archive_cache.get(path)
+        if arch is None:
+            save_fut = self._save_futs.get(path)
+            if save_fut is not None:
+                save_fut.result()
+            arch = self._load_group(path)
+            self._archive_cache[path] = arch
+        return arch
+
+    def _row_from_group(self, cid: int):
+        """One client's spilled row out of its group (in-flight export,
+        prefetched archive, or a synchronous file read)."""
+        path, idx = self._group_of.pop(cid)
+        with self._io_lock:
+            entry = self._inflight.pop(cid, None)
+        if entry is not None and entry[0] == path:
+            row = jax.tree.map(lambda x: np.asarray(x[idx]), entry[1])
+        else:
+            row = jax.tree.map(lambda x: x[idx], self._archive(path))
+        live = self._group_live[path]
+        live.discard(cid)
+        if not live:
+            self._drop_group(path)
+        return row
+
+    def _drop_group(self, path: str) -> None:
+        """Every row of the group restored (or re-spilled elsewhere): delete
+        the file once its write has finished."""
+        self._group_live.pop(path, None)
+        self._group_rows.pop(path, None)
+        self._archive_cache.pop(path, None)
+        self._archive_futs.pop(path, None)
+        save_fut = self._save_futs.pop(path, None)
+
+        def _rm():
+            if save_fut is not None:
+                save_fut.result()
+            try:
+                os.unlink(path)
+            except FileNotFoundError:
+                pass
+
+        self._cleanup_futs.append(self._submit(_rm))
+
+    def prefetch(self, ids) -> None:
+        """Warm the restore path for an upcoming chunk: group archives (and
+        legacy per-client spills) load into the host cache on the I/O
+        workers while the current chunk computes."""
+        paths = set()
+        for cid in (int(c) for c in np.asarray(ids).ravel()):
+            if cid not in self._pending:
+                continue
+            if cid in self._group_of:
+                path = self._group_of[cid][0]
+                with self._io_lock:
+                    in_mem = cid in self._inflight
+                if not in_mem and path not in self._archive_cache \
+                        and path not in self._archive_futs:
+                    paths.add(path)
+            elif cid in self._spilled and cid not in self._row_futs:
+                self._row_futs[cid] = self._submit(
+                    load_pytree, self._fresh, self._spill_path(cid))
+        for path in paths:
+            save_fut = self._save_futs.get(path)
+
+            def _load(path=path, save_fut=save_fut):
+                if save_fut is not None:
+                    save_fut.result()      # never read a half-written file
+                return self._load_group(path)
+
+            self._archive_futs[path] = self._submit(_load)
+
+    def collect_pending(self, ids):
+        """Drain this chunk's pending rows: returns ``(slots, rows)`` —
+        stacked host rows aligned with the slot array, fresh rows
+        broadcast-filled — or None when every chunk member was already
+        resident.  The caller grafts them with ``state_import_many`` and
+        owns the resulting state (the store's ``self.state`` is not
+        touched)."""
+        sel = [int(c) for c in np.asarray(ids).ravel()
+               if int(c) in self._pending]
+        if not sel:
+            return None
+        slots = np.asarray([self._pending.pop(c) for c in sel], np.int64)
+        if self._fresh_host is None:
+            self._fresh_host = jax.tree.map(np.asarray, self._fresh)
+        k = len(sel)
+        bufs = jax.tree.map(
+            lambda f: np.empty((k, *f.shape), f.dtype), self._fresh_host)
+        fresh_pos = []
+        for i, cid in enumerate(sel):
+            if cid in self._group_of:
+                row = self._row_from_group(cid)
+                self.restores += 1
+            elif cid in self._spilled:
+                fut = self._row_futs.pop(cid, None)
+                row = (fut.result() if fut is not None else
+                       load_pytree(self._fresh, self._spill_path(cid)))
+                self._spilled.discard(cid)
+                os.unlink(self._spill_path(cid))
+                self.restores += 1
+            else:
+                fresh_pos.append(i)         # zero-init: broadcast below
+                continue
+            jax.tree.map(
+                lambda b, r: b.__setitem__(i, np.asarray(r)), bufs, row)
+        if fresh_pos:
+            pos = np.asarray(fresh_pos, np.int64)
+            # ONE broadcast assignment per leaf — never k stacked copies
+            # of the fresh row
+            jax.tree.map(
+                lambda b, f: b.__setitem__(pos, f), bufs, self._fresh_host)
+        return slots, bufs
+
+    def flush_io(self) -> None:
+        """Block until every write-behind spill (and queued cleanup) has
+        hit disk — checkpoint/shutdown barrier."""
+        for fut in list(self._save_futs.values()):
+            fut.result()
+        for fut in self._cleanup_futs:
+            fut.result()
+        self._cleanup_futs = []
 
 
 def make_client_store(proto: Optional[ClientStateSpec], params,

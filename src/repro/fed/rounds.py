@@ -40,7 +40,7 @@ from repro.core.transport import (
 )
 from repro.fed.base import FedExperiment
 from repro.utils import hw
-from repro.fed.staging import stage_cohort_batches
+from repro.fed.staging import StagingBuffers, stage_cohort_batches
 
 RUNTIMES = ("sync", "async")
 
@@ -84,6 +84,11 @@ class FedConfig:
                                        # (real kernels on TPU, off elsewhere)
     wire_dtype: str = "f32"        # wire payload dtype: "f32" (native,
                                    # lossless) | "bf16" (half-width uploads)
+    # ---- chunk-streaming pipelined rounds (fed.pipeline): overlap host
+    # staging + state I/O with device compute.  Population + sync only.
+    pipeline: bool = False
+    pipeline_chunk: int = 128      # clients per pipeline chunk
+    pipeline_workers: int = 4      # background stager threads
 
     def __post_init__(self):
         if not (0.0 < self.participation <= 1.0):
@@ -120,7 +125,25 @@ class FedConfig:
         if self.sketch_iters < 0:
             raise ValueError(
                 f"sketch_iters must be >= 0, got {self.sketch_iters}")
+        if self.pipeline_chunk < 1:
+            raise ValueError(
+                f"pipeline_chunk must be >= 1, got {self.pipeline_chunk}")
+        if self.pipeline_workers < 1:
+            raise ValueError(
+                f"pipeline_workers must be >= 1, got "
+                f"{self.pipeline_workers}")
         self._validate_population()
+        if self.pipeline:
+            if not self.population_active:
+                raise ValueError(
+                    "pipeline=True requires population mode (the chunked "
+                    "cohort stream and sparse state store) — set "
+                    "population_size/cohort_size as well")
+            if self.runtime != "sync":
+                raise ValueError(
+                    "pipeline=True is a sync-runtime feature (the async "
+                    "runtime already overlaps dispatches); use "
+                    "runtime='sync'")
 
     def _validate_population(self):
         if self.population_size is None:
@@ -275,6 +298,21 @@ class FederatedExperiment(FedExperiment):
             self.state_store = None
             self.client_state = init_round_client_state(
                 self.spec, self.transport, params, fed.n_clients)
+        # persistent host staging buffers: host-side batch fns refill the
+        # same (S, K, ...) arrays every round instead of re-allocating
+        self._staging_buffers = StagingBuffers()
+        self.pipeline = None
+        if fed.pipeline:
+            if self.spec.mixing is not None:
+                import warnings
+                warnings.warn(
+                    f"algorithm {self.spec.name!r} has a mixing hook, "
+                    "which needs the decoded cohort stack; pipeline=True "
+                    "falls back to the serial round", RuntimeWarning,
+                    stacklevel=2)
+            else:
+                from repro.fed.pipeline import RoundPipeline
+                self.pipeline = RoundPipeline(self)
 
     def _resolve_population(self, population):
         from repro.fed.population import resolve_population
@@ -289,21 +327,27 @@ class FederatedExperiment(FedExperiment):
     def _stage_batches(self, cohort):
         """Stack per-client, per-step batches -> leading (S, K, ...) axes."""
         return stage_cohort_batches(self.client_batch_fn, cohort,
-                                    self.fed.local_steps, self.rng)
+                                    self.fed.local_steps, self.rng,
+                                    buffers=self._staging_buffers)
 
     def _stage_population(self, round_index: int):
         """One population round's inputs: streamed cohort, fold_in-derived
         batches and stacked keys (round_index as the salt), and the cohort's
-        state-store *slots* (acquire materializes/restores rows)."""
+        state-store *slots* (acquire materializes/restores rows).  The
+        host-phase split ("stage_batches" vs "state_acquire" spans) is what
+        the executor benchmarks read back to attribute serial round time."""
         from repro.fed.population import stage_population_batches
+        t = self.tracer
         pop = self.population
         cohort = pop.sample_cohort(round_index, self.fed.cohort_size)
-        batches = stage_population_batches(
-            self.client_batch_fn, pop, cohort, self.fed.local_steps,
-            salt=round_index)
+        with t.span("stage_batches", round=round_index + 1):
+            batches = stage_population_batches(
+                self.client_batch_fn, pop, cohort, self.fed.local_steps,
+                salt=round_index)
         keys = pop.cohort_keys(cohort, salt=round_index)
-        slots = (self.state_store.acquire(cohort)
-                 if self.state_store is not None else cohort)
+        with t.span("state_acquire", round=round_index + 1):
+            slots = (self.state_store.acquire(cohort)
+                     if self.state_store is not None else cohort)
         return slots, batches, keys
 
     # ------------------------------------------------------------ loop
@@ -311,25 +355,33 @@ class FederatedExperiment(FedExperiment):
     def run_round(self):
         t = self.tracer
         rnum = self.server.round + 1   # the round this update produces
-        with t.span("staging", round=rnum):
-            if self.population is not None:
-                slots, batches, key = self._stage_population(rnum - 1)
-            else:
-                cohort = self._sample_cohort()
-                batches = self._stage_batches(cohort)
-                key = jax.random.key(int(self.rng.integers(0, 2**31)))
-                slots = cohort
-        # one jitted call fuses local update + wire encode + aggregation;
-        # the span blocks on the result only when someone is tracing
-        with t.span("update", round=rnum):
-            cstate = (self.state_store.state
-                      if self.state_store is not None else self.client_state)
-            self.server, self.client_state, metrics = self.round_fn(
-                self.server, cstate, jnp.asarray(slots), batches, key)
-            if self.state_store is not None:
-                self.state_store.state = self.client_state
-            if t.enabled:
-                jax.block_until_ready(metrics)
+        if self.pipeline is not None:
+            # chunk-streaming pipelined round: staging/restores/compute
+            # interleave per chunk (fed.pipeline emits its own spans) and
+            # the driver advances server/client_state itself
+            metrics = self.pipeline.run_round()
+        else:
+            with t.span("staging", round=rnum):
+                if self.population is not None:
+                    slots, batches, key = self._stage_population(rnum - 1)
+                else:
+                    cohort = self._sample_cohort()
+                    batches = self._stage_batches(cohort)
+                    key = jax.random.key(int(self.rng.integers(0, 2**31)))
+                    slots = cohort
+            # one jitted call fuses local update + wire encode +
+            # aggregation; the span blocks on the result only when someone
+            # is tracing
+            with t.span("update", round=rnum):
+                cstate = (self.state_store.state
+                          if self.state_store is not None
+                          else self.client_state)
+                self.server, self.client_state, metrics = self.round_fn(
+                    self.server, cstate, jnp.asarray(slots), batches, key)
+                if self.state_store is not None:
+                    self.state_store.state = self.client_state
+                if t.enabled:
+                    jax.block_until_ready(metrics)
         tele = metrics.pop("telemetry", None)
         self.last_telemetry = tele
         rec = {k: float(v) for k, v in metrics.items()}

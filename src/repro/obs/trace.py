@@ -11,7 +11,7 @@ reach the server (dropout, over-staleness discard) are explicit
 Event schema (one JSON object per line under ``JsonlSink``):
 
   common        event, run_id, seq
-  span          phase, dur_s, round?, client_id?, sim_time?
+  span          phase, dur_s, round?, client_id?, chunk?, sim_time?
   round         round, metrics{...}, telemetry{...}?, sim_time?
   client_dropped  client_id, reason ("dropout"|"max_staleness"),
                   version, sim_time?
@@ -34,8 +34,14 @@ EVENT_TYPES = ("run_start", "span", "round", "client_dropped")
 DROP_REASONS = ("dropout", "max_staleness")
 
 # canonical phase names; the sync runtime fuses local update, wire encode
-# and aggregation into one jitted call traced as a single "update" span
-PHASES = ("staging", "local_update", "update", "flush", "eval")
+# and aggregation into one jitted call traced as a single "update" span.
+# Population staging splits into "stage_batches" + "state_acquire"; the
+# chunk-streaming pipeline (fed.pipeline) emits per-chunk "chunk_stage" /
+# "chunk_restore" / "chunk_compute" spans (carrying a ``chunk`` index)
+# and reuses "flush" for the blocking finish step.
+PHASES = ("staging", "stage_batches", "state_acquire", "local_update",
+          "update", "chunk_stage", "chunk_restore", "chunk_compute",
+          "flush", "eval")
 
 
 class Tracer:
@@ -67,7 +73,7 @@ class Tracer:
 
     @contextlib.contextmanager
     def span(self, phase: str, *, round: Optional[int] = None,
-             client_id: Optional[int] = None,
+             client_id: Optional[int] = None, chunk: Optional[int] = None,
              sim_time: Optional[float] = None):
         """Record one phase; emits a ``span`` event with the wall duration.
 
@@ -87,6 +93,8 @@ class Tracer:
                 fields["round"] = int(round)
             if client_id is not None:
                 fields["client_id"] = int(client_id)
+            if chunk is not None:
+                fields["chunk"] = int(chunk)
             if sim_time is not None:
                 fields["sim_time"] = float(sim_time)
             self.emit("span", **fields)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.data import lm_batches, make_lm_topic_corpus, partition_stats
 from repro.models import model as M
+from repro.fed.staging import mark_thread_safe
 from repro.scenarios.registry import register_source
 from repro.scenarios.spec import Scenario, ScenarioSpec, check_source_kwargs
 
@@ -104,6 +105,9 @@ def materialize_lm(spec: ScenarioSpec, seed: int, n_clients: int) -> Scenario:
 
     batch = spec.batch_size
 
+    # pure in (cid, rng) over immutable token streams: safe for
+    # concurrent stager workers
+    @mark_thread_safe
     def batch_fn(cid, rng):
         s = streams[cid]
         starts = rng.integers(0, len(s) - seq_len - 1, batch)

@@ -24,6 +24,7 @@ from repro.data import make_image_classification, partition_stats
 from repro.models.vision import (
     accuracy, classification_loss, cnn_apply, init_cnn, init_vit, vit_apply,
 )
+from repro.fed.staging import mark_thread_safe
 from repro.scenarios.registry import register_source
 from repro.scenarios.spec import Scenario, ScenarioSpec, check_source_kwargs
 
@@ -92,6 +93,9 @@ def materialize_vision(spec: ScenarioSpec, seed: int,
 
     batch = spec.batch_size
 
+    # pure in (cid, rng): reads immutable arrays + the lock-guarded lazy
+    # partition map, so concurrent stager workers may call it directly
+    @mark_thread_safe
     def batch_fn(cid, rng):
         # fixed size (with replacement) so cohort batches stack
         idx = rng.choice(parts[cid], size=batch, replace=True)

@@ -1,0 +1,398 @@
+"""Chunk-streaming pipelined rounds (fed.pipeline): streamed-aggregation
+parity against the monolithic wire flush, single-chunk bitwise equality
+with the legacy sync round, worker-count determinism, spill/prefetch
+round-trips, donation safety, config validation, and the per-chunk trace
+spans."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import build_experiment
+from repro.core.engine import (
+    AggregationConfig, ExecutorConfig, aggregate_wire, finish_stream,
+    make_cohort_executor, stream_chunk,
+)
+from repro.core.engine.executors import _default_mesh
+from repro.core.transport import Dense, Transport, TransportConfig, \
+    resolve_codec
+from repro.data import make_image_classification, stream_dirichlet_map
+from repro.fed import FedConfig
+from repro.fed.staging import (
+    StagingBuffers, is_thread_safe, mark_thread_safe,
+    serialized_unless_thread_safe,
+)
+from repro.models.vision import classification_loss, cnn_apply, init_cnn
+from repro.obs import MemorySink, attach
+from repro.obs.trace import validate_event
+
+POP = 64
+B = 6
+
+
+# ------------------------------------------------- streamed aggregation
+
+def _stacked(seed=0, b=B):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"M": jax.random.normal(k1, (b, 9, 7)),
+            "v": jax.random.normal(k2, (b, 5))}
+
+
+def _server(seed=11):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    params = {"M": jax.random.normal(k1, (9, 7)),
+              "v": jax.random.normal(k2, (5,))}
+    theta = jax.tree.map(lambda x: 0.1 * jnp.abs(x), params)
+    g = jax.tree.map(jnp.zeros_like, params)
+    return params, theta, g
+
+
+CFG = AggregationConfig(lr=0.05, local_steps=4)
+
+
+def _tp(name):
+    if name == "dense":
+        return Transport(Dense(), Dense())
+    codec = resolve_codec(name, TransportConfig(rank=3, use_pallas=False))
+    return Transport(codec, codec)
+
+
+@pytest.mark.parametrize("name", ["dense", "qblock"])
+def test_stream_single_chunk_bitwise_equals_aggregate_wire(name):
+    # exact=True + carry=None routes through the very expressions the
+    # monolithic aggregate_wire uses -> bitwise, jitted-vs-jitted
+    params, theta, g = _server()
+    tp = _tp(name)
+    dmsgs = jax.vmap(tp.delta.encode)(_stacked(1))
+    tmsgs = jax.vmap(tp.theta.encode)(_stacked(2))
+    w = jnp.ones((B,), jnp.float32)
+
+    ref_fn = jax.jit(lambda: aggregate_wire(params, theta, g, dmsgs, w,
+                                            CFG, tp, tmsgs=tmsgs))
+
+    def stream():
+        carry = stream_chunk(None, dmsgs, w, tp, tmsgs=tmsgs,
+                             exact=tp.theta.lossless)
+        return finish_stream(params, theta, g, carry, B, CFG)
+
+    ref = ref_fn()
+    out = jax.jit(stream)()
+    for a, b in zip(jax.tree.leaves(ref[:3]), jax.tree.leaves(out[:3])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in ("drift", "norm_drift", "freshness"):
+        assert float(ref[3][k]) == float(out[3][k])
+    for a, b in zip(jax.tree.leaves(ref[4]["step"]),
+                    jax.tree.leaves(out[4]["step"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stream_multichunk_carry_crosses_jit_bitwise():
+    # the pipeline's fold always crosses jit boundaries chunk by chunk;
+    # re-folding through FRESH jit compilations must reproduce the same
+    # bits (no compilation nondeterminism in the streamed reduction), and
+    # the result stays close to the monolithic flush.  (A single fused
+    # jit over both folds is NOT bitwise — XLA may reassociate across the
+    # chunk expressions — which is exactly why the parity contract is
+    # jitted-chunk-program vs jitted-chunk-program.)
+    params, theta, g = _server()
+    tp = _tp("dense")
+    deltas, thetas = _stacked(3), _stacked(4)
+    dmsgs = jax.vmap(tp.delta.encode)(deltas)
+    tmsgs = jax.vmap(tp.theta.encode)(thetas)
+    w = jnp.ones((B,), jnp.float32)
+    cut = 4
+    part = lambda t, a, b: jax.tree.map(lambda x: x[a:b], t)  # noqa: E731
+
+    def fold():
+        # distinct lambda objects -> distinct jit cache entries -> a
+        # genuine recompilation on every call to fold()
+        step1 = jax.jit(lambda: stream_chunk(
+            None, part(dmsgs, 0, cut), w[:cut], tp,
+            tmsgs=part(tmsgs, 0, cut)))
+        step2 = jax.jit(lambda c: stream_chunk(
+            c, part(dmsgs, cut, B), w[cut:], tp,
+            tmsgs=part(tmsgs, cut, B)))
+        fin = jax.jit(lambda c: finish_stream(params, theta, g, c, B, CFG))
+        return fin(step2(step1()))
+
+    ref, out = fold(), fold()
+    for a, b in zip(jax.tree.leaves(ref[:4]), jax.tree.leaves(out[:4])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    mono = aggregate_wire(params, theta, g, dmsgs, w, CFG, tp, tmsgs=tmsgs)
+    for a, b in zip(jax.tree.leaves(mono[:3]), jax.tree.leaves(out[:3])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    # multi-chunk drift uses the decomposed form; clamped non-negative
+    assert float(out[3]["drift"]) >= 0.0
+    np.testing.assert_allclose(float(out[3]["drift"]),
+                               float(mono[3]["drift"]),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_stream_chunk_rejects_bad_calls():
+    tp = _tp("dense")
+    dmsgs = jax.vmap(tp.delta.encode)(_stacked(1))
+    w = jnp.ones((B,), jnp.float32)
+    carry = stream_chunk(None, dmsgs, w, tp)
+    with pytest.raises(ValueError, match="single-chunk"):
+        stream_chunk(carry, dmsgs, w, tp, exact=True)
+    with pytest.raises(ValueError, match="not both"):
+        stream_chunk(None, dmsgs, w, tp, tmsgs=dmsgs, thetas=_stacked(2))
+
+
+# ---------------------------------------------------- experiment fixture
+
+@pytest.fixture(scope="module")
+def problem():
+    X, y = make_image_classification(400, image_size=8, n_classes=4,
+                                     seed=0, noise=1.0)
+    parts = stream_dirichlet_map(y, POP, alpha=0.3, samples_per_client=32,
+                                 seed=0)
+    params = init_cnn(jax.random.key(0), n_classes=4, width=4, blocks=1)
+
+    def loss_fn(p, batch):
+        return classification_loss(cnn_apply(p, batch["x"]), batch["y"])
+
+    @mark_thread_safe
+    def batch_fn(cid, rng):
+        idx = rng.choice(parts[cid], size=4)
+        return {"x": np.asarray(X[idx]), "y": np.asarray(y[idx])}
+
+    return params, loss_fn, batch_fn
+
+
+def _run(problem, algo="scaffold", rounds=3, budget=None, tmp_path=None,
+         **kw):
+    params, loss_fn, batch_fn = problem
+    exp = build_experiment(
+        algo, params=params, loss_fn=loss_fn, client_batch_fn=batch_fn,
+        rounds=rounds, local_steps=2, population_size=POP, cohort_size=8,
+        state_budget=budget, seed=0,
+        spill_dir=None if tmp_path is None else str(tmp_path), **kw)
+    hist = exp.run()
+    return exp, hist
+
+
+def _assert_bitwise(exp_a, h_a, exp_b, h_b, keys=("loss", "drift",
+                                                 "upload_bytes")):
+    for ra, rb in zip(h_a, h_b):
+        for k in keys:
+            if k in ra or k in rb:
+                assert ra[k] == rb[k], (k, ra[k], rb[k])
+    for a, b in zip(jax.tree.leaves(exp_a.server.params),
+                    jax.tree.leaves(exp_b.server.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- single-chunk parity
+
+@pytest.mark.parametrize("algo", ["scaffold", "fedavg"])
+def test_single_chunk_pipelined_bitwise_equals_serial(problem, algo):
+    # pipeline_chunk >= cohort -> one chunk, exact fold: the pipelined
+    # round must reproduce the legacy fused round bit for bit
+    e0, h0 = _run(problem, algo=algo)
+    e1, h1 = _run(problem, algo=algo, pipeline=True, pipeline_chunk=8)
+    assert e1.pipeline is not None and e1.pipeline.exact
+    assert h1[-1]["pipeline_chunks"] == 1
+    _assert_bitwise(e0, h0, e1, h1)
+
+
+def test_single_chunk_pipelined_bitwise_second_order(problem):
+    # aligned second-order path: theta uploads + drift controller engaged
+    e0, h0 = _run(problem, algo="fedpac_soap", rounds=2)
+    e1, h1 = _run(problem, algo="fedpac_soap", rounds=2, pipeline=True,
+                  pipeline_chunk=64)
+    _assert_bitwise(e0, h0, e1, h1, keys=("loss", "drift", "beta",
+                                          "upload_bytes"))
+    for a, b in zip(jax.tree.leaves(e0.server.theta),
+                    jax.tree.leaves(e1.server.theta)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------- multi-chunk determinism
+
+def test_multichunk_worker_count_invariant_and_close_to_serial(problem):
+    # chunk=3 on cohort 8 -> chunks (3, 3, 2) incl. the tail program;
+    # staged rows are keyed by client id, so the stager worker count can
+    # never change the numbers
+    runs = {w: _run(problem, pipeline=True, pipeline_chunk=3,
+                    pipeline_workers=w) for w in (1, 2, 8)}
+    e1, h1 = runs[1]
+    assert h1[-1]["pipeline_chunks"] == 3
+    assert h1[-1]["pipeline_chunk_size"] == 3
+    assert 0.0 <= h1[-1]["pipeline_bubble"] <= 1.0
+    for w in (2, 8):
+        _assert_bitwise(e1, h1, *runs[w])
+    # multi-chunk folds change the reduction order -> allclose, not ==
+    e0, h0 = _run(problem)
+    for ra, rb in zip(h0, h1):
+        np.testing.assert_allclose(ra["loss"], rb["loss"], rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(e0.server.params),
+                    jax.tree.leaves(e1.server.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_pipelined_spill_restore_bitwise(problem, tmp_path):
+    # budget == cohort forces evict/spill every round; the pipeline's
+    # deferred acquire + prefetch + collect_pending must reproduce the
+    # serial store path exactly, spills and all
+    e0, h0 = _run(problem, rounds=4, budget=8, tmp_path=tmp_path / "s")
+    e1, h1 = _run(problem, rounds=4, budget=8, tmp_path=tmp_path / "p",
+                  pipeline=True, pipeline_chunk=8)
+    assert h1[-1]["state_spills"] > 0
+    assert h1[-1]["state_spills"] == h0[-1]["state_spills"]
+    assert h1[-1]["state_restores"] == h0[-1]["state_restores"]
+    _assert_bitwise(e0, h0, e1, h1)
+
+
+def test_multichunk_spill_restore_worker_invariant(problem, tmp_path):
+    a = _run(problem, rounds=4, budget=8, tmp_path=tmp_path / "a",
+             pipeline=True, pipeline_chunk=3, pipeline_workers=1)
+    b = _run(problem, rounds=4, budget=8, tmp_path=tmp_path / "b",
+             pipeline=True, pipeline_chunk=3, pipeline_workers=8)
+    assert a[1][-1]["state_restores"] > 0
+    _assert_bitwise(a[0], a[1], b[0], b[1])
+
+
+def test_pipeline_donation_does_not_alias_live_buffers(problem):
+    # chunk>1 rounds donate write_state/carry back to _next; the buffers
+    # the experiment still holds (store state, server params) must stay
+    # readable and unchanged by the in-place reuse
+    params, loss_fn, batch_fn = problem
+    exp = build_experiment(
+        "scaffold", params=params, loss_fn=loss_fn,
+        client_batch_fn=batch_fn, rounds=2, local_steps=2,
+        population_size=POP, cohort_size=8, seed=0, pipeline=True,
+        pipeline_chunk=3)
+    live_params = exp.server.params
+    live_state = exp.state_store.state
+    snap_p = jax.tree.map(lambda x: np.asarray(x).copy(), live_params)
+    snap_s = jax.tree.map(lambda x: np.asarray(x).copy(), live_state)
+    exp.run_round()
+    exp.run_round()
+    for ref, snap in ((live_params, snap_p), (live_state, snap_s)):
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(snap)):
+            np.testing.assert_array_equal(np.asarray(a), b)
+
+
+# ------------------------------------------------- validation, fallback
+
+def test_pipeline_config_validation(problem):
+    with pytest.raises(ValueError, match="population"):
+        FedConfig(pipeline=True, n_clients=4, cohort_size=4)
+    with pytest.raises(ValueError, match="sync"):
+        FedConfig(pipeline=True, population_size=100, cohort_size=4,
+                  runtime="async")
+    with pytest.raises(ValueError, match="pipeline_chunk"):
+        FedConfig(pipeline_chunk=0)
+    with pytest.raises(ValueError, match="pipeline_workers"):
+        FedConfig(pipeline_workers=0)
+
+
+def test_mixing_algorithms_fall_back_to_serial_round(problem):
+    params, loss_fn, batch_fn = problem
+    with pytest.warns(RuntimeWarning, match="mixing"):
+        exp = build_experiment(
+            "fedpm_soap", params=params, loss_fn=loss_fn,
+            client_batch_fn=batch_fn, rounds=1, local_steps=2,
+            population_size=POP, cohort_size=4, seed=0, pipeline=True)
+    assert exp.pipeline is None
+    rec = exp.run_round()          # serial round still works end to end
+    assert np.isfinite(rec["loss"])
+
+
+# ------------------------------------------------- chunked executor
+
+def test_chunked_run_pads_and_drops_remainder():
+    # 8 clients, chunk 3 -> scan over 2 full chunks + padded tail whose
+    # garbage rows are dropped; must equal plain vmap bitwise
+    def one(cid, x, k):
+        return jnp.sin(x) * (cid + 1), x.sum() + cid
+
+    ids = jnp.arange(8)
+    xs = jax.random.normal(jax.random.key(0), (8, 5))
+    ks = jnp.arange(8)
+    ref = jax.vmap(one)(ids, xs, ks)
+    exe = make_cohort_executor(ExecutorConfig(backend="chunked",
+                                              chunk_size=3))
+    out = exe(one, ids, xs, ks)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_default_mesh_is_cached():
+    assert _default_mesh() is _default_mesh()
+
+
+# ------------------------------------------------------ observability
+
+def test_pipeline_emits_chunk_spans(problem):
+    params, loss_fn, batch_fn = problem
+    exp = build_experiment(
+        "scaffold", params=params, loss_fn=loss_fn,
+        client_batch_fn=batch_fn, rounds=1, local_steps=2,
+        population_size=POP, cohort_size=8, seed=0, pipeline=True,
+        pipeline_chunk=4)
+    sink = MemorySink()
+    attach(exp, sink)
+    exp.run()
+    for ev in sink.events:
+        validate_event(ev)
+    spans = [e for e in sink.events if e["event"] == "span"]
+    phases = {e["phase"] for e in spans}
+    assert {"staging", "state_acquire", "chunk_stage", "chunk_restore",
+            "chunk_compute", "flush"} <= phases
+    chunked = [e for e in spans if e["phase"] == "chunk_compute"]
+    assert sorted(e["chunk"] for e in chunked) == [0, 1]
+    assert all(e["dur_s"] >= 0 for e in spans)
+    rec = exp.history[-1]
+    assert rec["pipeline_stage_wait_s"] >= 0
+    assert rec["pipeline_restore_wait_s"] >= 0
+
+
+def test_serial_population_round_emits_staging_subspans(problem):
+    params, loss_fn, batch_fn = problem
+    exp = build_experiment(
+        "scaffold", params=params, loss_fn=loss_fn,
+        client_batch_fn=batch_fn, rounds=1, local_steps=2,
+        population_size=POP, cohort_size=8, seed=0)
+    sink = MemorySink()
+    attach(exp, sink)
+    exp.run()
+    phases = {e["phase"] for e in sink.events if e["event"] == "span"}
+    assert {"staging", "stage_batches", "state_acquire",
+            "update"} <= phases
+
+
+# -------------------------------------------------------- host buffers
+
+def test_staging_buffers_reuse_and_peek():
+    bufs = StagingBuffers()
+    row = {"x": np.ones((2, 3), np.float32)}
+    a = bufs.get(("pipe", 0), 4, row)
+    b = bufs.get(("pipe", 0), 4, row)
+    assert a["x"] is b["x"]                       # same storage, reused
+    assert bufs.get(("pipe", 1), 4, row)["x"] is not a["x"]
+    StagingBuffers.fill_row(a, 2, row)
+    peeked = bufs.peek(("pipe", 0), 4)
+    assert peeked["x"] is a["x"]
+    np.testing.assert_array_equal(peeked["x"][2], row["x"])
+    with pytest.raises(KeyError):
+        bufs.peek(("pipe", 9), 4)
+
+
+def test_thread_safety_contract():
+    def unsafe(cid, rng):
+        return cid
+
+    @mark_thread_safe
+    def safe(cid, rng):
+        return cid
+
+    assert not is_thread_safe(unsafe) and is_thread_safe(safe)
+    assert serialized_unless_thread_safe(safe) is safe
+    wrapped = serialized_unless_thread_safe(unsafe)
+    assert wrapped is not unsafe and wrapped(3, None) == 3
