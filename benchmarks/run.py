@@ -18,7 +18,8 @@ import sys
 import time
 
 # (job name, BENCH file stem) for jobs whose run() returns structured rows
-BENCH_JOBS = {"exec_scaling": "executor", "transport": "transport"}
+BENCH_JOBS = {"exec_scaling": "executor", "transport": "transport",
+              "traffic": "traffic"}
 
 
 def main(argv=None):
@@ -28,7 +29,8 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table1_vit,fig3,"
                          "table3,table4,table5,table6,async_drift,"
-                         "exec_scaling,transport,fused_agg,scenario_matrix")
+                         "exec_scaling,transport,fused_agg,scenario_matrix,"
+                         "traffic")
     ap.add_argument("--bench-dir", default=".",
                     help="directory for the BENCH_*.json perf-trajectory "
                          "documents (exec_scaling/transport jobs)")
@@ -40,7 +42,7 @@ def main(argv=None):
                             table4_beta, table5_ablation, table6_comm,
                             seed_robustness, async_drift, executor_scaling,
                             transport_bench, fused_agg_bench,
-                            scenario_matrix)
+                            scenario_matrix, traffic_replay)
     from benchmarks.common import emit
 
     print("name,us_per_call,derived")
@@ -56,6 +58,7 @@ def main(argv=None):
         ("async_drift", lambda: async_drift.run(quick=quick)),
         ("exec_scaling", lambda: executor_scaling.run(quick=quick)),
         ("transport", lambda: transport_bench.run(quick=quick)),
+        ("traffic", lambda: traffic_replay.run(quick=quick)),
         # standalone micro-bench (no training): the same rows also ride
         # inside the transport job's BENCH_transport.json
         ("fused_agg", lambda: fused_agg_bench.run(quick=quick)),

@@ -1,0 +1,144 @@
+"""Continuous-traffic replay sweep: trace shape x buffer policy, plus one
+mid-stream A/B hot-swap arm.
+
+Each cell replays one arrival trace (constant / diurnal / bursty — one
+diurnal cell also churns) through the ``TrafficExperiment`` event loop
+under a fixed simulated-time budget and reports the continuous-traffic
+headline: **time-to-quality**, the first simulated second at which the
+anytime-eval test loss crosses a target derived from the constant-rate
+baseline's best loss.  Round-shaped "rounds to accuracy" does not exist in
+an open-ended stream — simulated seconds to a quality bar is the
+comparable unit across traces and policies.
+
+The A/B arm replays one diurnal trace against two algorithm schedules —
+fedpac_soap throughout vs fedpac_soap hot-swapped to fedavg mid-stream —
+with identical arrival realizations (shared trace seed), so the metric gap
+is attributable to the swap alone.
+
+Returns the structured ``BENCH_traffic.json`` row list
+(``{"name", "us_per_call", "derived": {...}}`` — ``repro.obs.bench``);
+``us_per_call`` is wall microseconds per server flush.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, materialize_cached
+
+SCENARIO = "cifar_like_cnn_dir0.05"
+N_CLIENTS = 10
+
+# (tag, trace kind, trace kwargs, churn?) — rates are arrivals per
+# simulated second against a ~1s mean client latency, so the pool stays
+# busy without the backlog growing unboundedly
+TRACE_GRID = [
+    ("constant", "constant", {"rate": 6.0}, False),
+    ("diurnal", "diurnal", {"base": 6.0, "amplitude": 0.8, "period": 4.0},
+     False),
+    ("bursty", "bursty", {"base": 4.0, "jump": 0.6, "decay": 1.2}, False),
+    ("diurnal_churn", "diurnal",
+     {"base": 6.0, "amplitude": 0.8, "period": 4.0}, True),
+]
+POLICIES = ("count", "interval")
+
+
+def _build(algo, bundle, tc, *, rounds):
+    from repro.api import AsyncConfig, build_experiment
+    return build_experiment(
+        algo, scenario=bundle,
+        async_cfg=AsyncConfig(buffer_size=3, concurrency=4),
+        traffic=tc, n_clients=N_CLIENTS, rounds=rounds, local_steps=5,
+        scenario_seed=7, seed=0)
+
+
+def run(quick: bool = True):
+    from repro.api import ChurnConfig, TrafficConfig
+    from repro.fed.traffic import run_ab, time_to_quality
+
+    sim_budget = 8.0 if quick else 30.0
+    eval_every = 1.0
+    rounds = 10 if quick else 30          # FedConfig bookkeeping only
+    bundle = materialize_cached(SCENARIO, 7, N_CLIENTS)
+
+    cells = []
+    for tag, kind, tkw, churn in TRACE_GRID:
+        for policy in POLICIES:
+            tc = TrafficConfig(
+                trace=kind, trace_kwargs=tkw, buffer_policy=policy,
+                flush_interval=1.0 if policy == "interval" else None,
+                eval_every=eval_every,
+                churn=ChurnConfig(join_rate=0.5, leave_rate=0.5,
+                                  initial_active=8) if churn else None)
+            exp = _build("fedpac_soap", bundle, tc, rounds=rounds)
+            t0 = time.perf_counter()
+            summary = exp.run_stream(sim_budget=sim_budget)
+            wall = time.perf_counter() - t0
+            cells.append((f"traffic_{tag}_{policy}", tag, policy, summary,
+                          list(exp.eval_history), wall))
+
+    # quality bar: within 5% of the constant-rate count-policy baseline's
+    # best anytime test loss — reachable by construction in that cell,
+    # comparable across every other one
+    base_ev = cells[0][4]
+    target = min(r["test_loss"] for r in base_ev) * 1.05
+
+    rows = []
+    for name, tag, policy, s, ev, wall in cells:
+        ttq = time_to_quality(ev, "test_loss", target,
+                              higher_is_better=False)
+        us = wall / max(s["flushes"], 1) * 1e6
+        emit(name, us,
+             f"ttq_sim_s={ttq if ttq is not None else 'never'};"
+             f"flushes={s['flushes']};loss={ev[-1]['test_loss']:.4f};"
+             f"backlog={s['backlog']};discarded={s['discarded']}")
+        rows.append({"name": name, "us_per_call": us, "derived": {
+            "trace": tag, "policy": policy, "target_loss": float(target),
+            "ttq_sim_s": None if ttq is None else float(ttq),
+            "flushes": int(s["flushes"]), "sim_time": float(s["sim_time"]),
+            "final_loss": float(ev[-1]["test_loss"]),
+            "final_acc": float(ev[-1]["test_acc"]),
+            "backlog": int(s["backlog"]), "dropped": int(s["dropped"]),
+            "discarded": int(s["discarded"]),
+            "joins": int(s["joins"]), "leaves": int(s["leaves"])}})
+
+    # --- mid-stream A/B hot-swap: same trace, swap vs no swap ------------
+    tkw = {"base": 6.0, "amplitude": 0.8, "period": 4.0}
+    tc_a = TrafficConfig(trace="diurnal", trace_kwargs=tkw,
+                         eval_every=eval_every)
+    tc_b = TrafficConfig(trace="diurnal", trace_kwargs=tkw,
+                         eval_every=eval_every, swap_to="fedavg",
+                         swap_at=sim_budget / 2)
+    a = _build("fedpac_soap", bundle, tc_a, rounds=rounds)
+    b = _build("fedpac_soap", bundle, tc_b, rounds=rounds)
+    t0 = time.perf_counter()
+    out = run_ab(a, b, sim_budget=sim_budget)
+    wall = time.perf_counter() - t0
+    ttq_a = time_to_quality(out["eval_a"], "test_loss", target,
+                            higher_is_better=False)
+    ttq_b = time_to_quality(out["eval_b"], "test_loss", target,
+                            higher_is_better=False)
+    flushes = out["a"]["flushes"] + out["b"]["flushes"]
+    us = wall / max(flushes, 1) * 1e6
+    emit("traffic_ab_hotswap", us,
+         f"ttq_a={ttq_a if ttq_a is not None else 'never'};"
+         f"ttq_b={ttq_b if ttq_b is not None else 'never'};"
+         f"loss_a={out['eval_a'][-1]['test_loss']:.4f};"
+         f"loss_b={out['eval_b'][-1]['test_loss']:.4f};"
+         f"swapped_to={b.spec.name}")
+    rows.append({"name": "traffic_ab_hotswap", "us_per_call": us,
+                 "derived": {
+                     "trace": "diurnal", "swap_to": "fedavg",
+                     "swap_at": float(sim_budget / 2),
+                     "target_loss": float(target),
+                     "ttq_a": None if ttq_a is None else float(ttq_a),
+                     "ttq_b": None if ttq_b is None else float(ttq_b),
+                     "final_loss_a": float(out["eval_a"][-1]["test_loss"]),
+                     "final_loss_b": float(out["eval_b"][-1]["test_loss"]),
+                     "flushes_a": int(out["a"]["flushes"]),
+                     "flushes_b": int(out["b"]["flushes"]),
+                     "discarded_b": int(out["b"]["discarded"])}})
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -42,12 +42,16 @@ from repro.fed.rounds import FedConfig, FederatedExperiment
 from repro.fed.async_runtime import (  # noqa: F401
     AsyncConfig, AsyncFederatedExperiment, LatencyModel,
 )
+from repro.fed.traffic import (  # noqa: F401  (re-exported API surface)
+    ChurnConfig, TrafficConfig, TrafficExperiment,
+)
 
 __all__ = [
-    "AlgorithmSpec", "AsyncConfig", "ClientStateSpec",
+    "AlgorithmSpec", "AsyncConfig", "ChurnConfig", "ClientStateSpec",
     "DuplicateAlgorithmError", "DuplicateScenarioError", "FedConfig",
     "FedExperiment", "LatencyModel", "PartitionSpec", "Scenario",
-    "ScenarioSpec", "UnknownAlgorithmError", "UnknownScenarioError",
+    "ScenarioSpec", "TrafficConfig", "TrafficExperiment",
+    "UnknownAlgorithmError", "UnknownScenarioError",
     "build_experiment", "make_experiment", "materialize", "register",
     "register_scenario", "registered", "registered_scenarios", "resolve",
     "resolve_scenario",
@@ -67,6 +71,7 @@ def build_experiment(
     async_cfg: Optional[AsyncConfig] = None,
     fed: Optional[FedConfig] = None,
     population=None,
+    traffic=None,
     **fed_overrides,
 ) -> FedExperiment:
     """Build the right runtime for ``algorithm`` on ``scenario`` (or on an
@@ -91,6 +96,11 @@ def build_experiment(
     async_cfg: execution-model knobs; implies ``runtime="async"`` when no
       config was passed at all — an explicit ``fed`` config or ``runtime``
       override is authoritative, and a sync one + async_cfg is an error.
+    traffic: optional ``repro.fed.traffic.TrafficConfig`` — selects the
+      trace-driven continuous-traffic runtime (``TrafficExperiment``):
+      open-ended arrival streams, churn, budgets, anytime eval, hot-swap.
+      Implies ``runtime="async"`` when no runtime is named; incompatible
+      with an explicit sync runtime.
     population: optional ``repro.fed.population.ClientPopulation`` carrying
       a weighted/availability cohort sampler; requires the config's
       population knobs (``population_size``/``cohort_size``).  With
@@ -105,8 +115,8 @@ def build_experiment(
     spec = resolve(algorithm)
     base = fed if fed is not None else FedConfig()
     changes = dict(fed_overrides, algorithm=spec.name)
-    if async_cfg is not None and fed is None and "runtime" not in \
-            fed_overrides:
+    if (async_cfg is not None or traffic is not None) and fed is None \
+            and "runtime" not in fed_overrides:
         changes["runtime"] = "async"
 
     scn = None
@@ -162,9 +172,19 @@ def build_experiment(
             raise ValueError(
                 "async_cfg given but the config says runtime='sync' — set "
                 "runtime='async' (or drop the async_cfg)")
+        if traffic is not None:
+            raise ValueError(
+                "traffic= given but the config says runtime='sync' — the "
+                "continuous-traffic runtime is event-driven (async)")
         exp = FederatedExperiment(cfg, params, loss_fn, client_batch_fn,
                                   eval_fn, opt_kwargs, spec=spec,
                                   population=population)
+    elif traffic is not None:
+        from repro.fed.traffic import TrafficExperiment
+        exp = TrafficExperiment(cfg, params, loss_fn, client_batch_fn,
+                                eval_fn, opt_kwargs, async_cfg=async_cfg,
+                                spec=spec, population=population,
+                                traffic=traffic)
     else:
         exp = AsyncFederatedExperiment(cfg, params, loss_fn, client_batch_fn,
                                        eval_fn, opt_kwargs,

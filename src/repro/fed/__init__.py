@@ -13,3 +13,7 @@ from repro.fed.population import (
     DenseClientStore, UniformSampler, WeightedSampler, make_client_store,
     make_population, stage_population_batches,
 )
+from repro.fed.traffic import (
+    BurstyRate, ChurnConfig, ConstantRate, DiurnalRate, PiecewiseRate,
+    TrafficConfig, TrafficExperiment,
+)

@@ -56,29 +56,72 @@ class AsyncFederatedExperiment(FedExperiment):
         super().__init__(fed)
         from repro.fed.population import resolve_population
         self.population = resolve_population(fed, population)
-        self.spec = resolve(spec if spec is not None else fed.algorithm)
-        if self.spec.client_state is not None:
-            raise ValueError(
-                f"algorithm {self.spec.name!r} declares lock-step per-client "
-                "persistent state, which buffered-asynchronous execution "
-                "cannot exchange — use the synchronous runtime")
         self.acfg = async_cfg or AsyncConfig()
         self.loss_fn = loss_fn
         self.client_batch_fn = client_batch_fn
         self.eval_fn = eval_fn
 
-        self.opt = self.spec.make_optimizer(**(opt_kwargs or {}))
-        self.align = self.spec.align
-        self.lr = resolve_lr(fed, self.spec)
+        self._bind_spec(spec if spec is not None else fed.algorithm,
+                        params, opt_kwargs)
 
         beta = self.spec.resolve_beta(fed.beta)
         ctrl = make_controller(beta, correct=self.spec.correct,
                                beta_max=BETA_MAX_AUTO)
+        self._weight_fn = make_staleness_weight(
+            self.acfg.staleness_mode, self.acfg.staleness_alpha,
+            self.acfg.hinge_threshold)
+
+        self.server = init_server(params, self.opt, geom=ctrl)
+        if self.population is not None:
+            # participation fractions don't scale to 10^6-id spaces: the
+            # in-flight pool sizes from cohort_size (or the explicit knob)
+            concurrency = self.acfg.concurrency
+            if concurrency is None:
+                concurrency = max(self.acfg.buffer_size, fed.cohort_size)
+            concurrency = max(1, min(concurrency, self.population.size))
+            if self.acfg.buffer_size > concurrency:
+                raise ValueError(
+                    f"buffer_size={self.acfg.buffer_size} exceeds the "
+                    f"population-mode concurrency {concurrency} — raise "
+                    "AsyncConfig.concurrency or cohort_size")
+        else:
+            concurrency = self.acfg.resolve_concurrency(fed.n_clients,
+                                                        fed.participation)
+        self.scheduler = SimScheduler(self.acfg.latency, fed.n_clients,
+                                      concurrency, seed=fed.seed,
+                                      population=self.population)
+        # batches/keys draw from a separate stream so the simulated event
+        # order is invariant to how many batch samples a client consumes.
+        self.rng = np.random.default_rng(fed.seed + 1)
+        self.total_dropped = 0
+        self.total_discarded = 0
+        # flushes normally eval; the traffic runtime turns this off when it
+        # samples anytime eval on its own simulated-time grid instead
+        self._flush_eval = True
+
+    # ------------------------------------------------------------ algorithm
+
+    def _bind_spec(self, spec, params, opt_kwargs: Optional[dict]) -> None:
+        """Resolve ``spec`` and (re)build everything derived from it: the
+        optimizer, lr, transport, jitted local round, jitted flush, and the
+        EF residual machinery.  Called once at construction — and again by
+        the continuous-traffic hot-swap, which rebinds a new algorithm
+        mid-stream while keeping the server geometry warm."""
+        fed = self.fed
+        self.spec = resolve(spec)
+        if self.spec.client_state is not None:
+            raise ValueError(
+                f"algorithm {self.spec.name!r} declares lock-step per-client "
+                "persistent state, which buffered-asynchronous execution "
+                "cannot exchange — use the synchronous runtime")
+        self.opt = self.spec.make_optimizer(**(opt_kwargs or {}))
+        self.align = self.spec.align
+        self.lr = resolve_lr(fed, self.spec)
 
         run = LocalRunConfig(lr=self.lr, local_steps=fed.local_steps,
                              beta=0.0, hessian_freq=fed.hessian_freq,
                              align=self.align)
-        local_fn = make_local_update(self.spec, loss_fn, self.opt, run)
+        local_fn = make_local_update(self.spec, self.loss_fn, self.opt, run)
 
         # client-side wire encoding happens inside the jitted local round:
         # the buffer then holds wire messages, not dense trees (a real
@@ -137,35 +180,7 @@ class AsyncFederatedExperiment(FedExperiment):
                     lambda a, d: a.at[cid].add(d.astype(jnp.float32)),
                     s, self.transport.delta.decode(msg)),
                 donate_argnums=0)
-        self._weight_fn = make_staleness_weight(
-            self.acfg.staleness_mode, self.acfg.staleness_alpha,
-            self.acfg.hinge_threshold)
-
-        self.server = init_server(params, self.opt, geom=ctrl)
         self._theta0 = zero_theta(self.opt, params) if self.align else None
-        if self.population is not None:
-            # participation fractions don't scale to 10^6-id spaces: the
-            # in-flight pool sizes from cohort_size (or the explicit knob)
-            concurrency = self.acfg.concurrency
-            if concurrency is None:
-                concurrency = max(self.acfg.buffer_size, fed.cohort_size)
-            concurrency = max(1, min(concurrency, self.population.size))
-            if self.acfg.buffer_size > concurrency:
-                raise ValueError(
-                    f"buffer_size={self.acfg.buffer_size} exceeds the "
-                    f"population-mode concurrency {concurrency} — raise "
-                    "AsyncConfig.concurrency or cohort_size")
-        else:
-            concurrency = self.acfg.resolve_concurrency(fed.n_clients,
-                                                        fed.participation)
-        self.scheduler = SimScheduler(self.acfg.latency, fed.n_clients,
-                                      concurrency, seed=fed.seed,
-                                      population=self.population)
-        # batches/keys draw from a separate stream so the simulated event
-        # order is invariant to how many batch samples a client consumes.
-        self.rng = np.random.default_rng(fed.seed + 1)
-        self.total_dropped = 0
-        self.total_discarded = 0
 
     # ------------------------------------------------------------ clients
 
@@ -225,7 +240,6 @@ class AsyncFederatedExperiment(FedExperiment):
         """Collect ``buffer_size`` usable client reports, then flush."""
         acf, sched, t = self.acfg, self.scheduler, self.tracer
         version = self.server.round
-        rnum = version + 1             # the round this flush produces
         sched.fill(version, self._client_payload)
         buffered, stale, weights = [], [], []
         dropped = discarded = 0
@@ -251,25 +265,42 @@ class AsyncFederatedExperiment(FedExperiment):
                 discarded += 1
                 t.client_dropped(ev.client_id, reason="max_staleness",
                                  version=ev.version, sim_time=ev.time)
-                if self._ef_store is not None:
-                    # re-acquire: the row may have been evicted (and
-                    # spilled) while this result was in flight
-                    slot = int(self._ef_store.acquire([ev.client_id])[0])
-                    self._ef_store.state = self._ef_restore(
-                        self._ef_store.state, jnp.asarray(slot),
-                        ev.payload["delta"])
-                elif self._ef:
-                    # the residual was committed at dispatch assuming this
-                    # upload would be aggregated — restore the discarded
-                    # components into the client's residual (EF invariant:
-                    # compression error is delayed, never lost)
-                    self._ef_state = self._ef_restore(
-                        self._ef_state, jnp.asarray(ev.client_id),
-                        ev.payload["delta"])
+                self._discard_restore(ev)
                 continue
             buffered.append(ev)
             stale.append(s)
             weights.append(self._weight_fn(s))
+
+        return self._flush_buffer(buffered, stale, weights,
+                                  dropped=dropped, discarded=discarded)
+
+    def _discard_restore(self, ev) -> None:
+        """An arrival whose work will never reach the server (over-stale,
+        voided by churn, or orphaned by a hot-swap): restore its decoded
+        delta into the client's EF residual so compression error is
+        delayed, never lost.  No-op for feedback-free transports."""
+        if self._ef_store is not None:
+            # re-acquire: the row may have been evicted (and spilled)
+            # while this result was in flight
+            slot = int(self._ef_store.acquire([ev.client_id])[0])
+            self._ef_store.state = self._ef_restore(
+                self._ef_store.state, jnp.asarray(slot),
+                ev.payload["delta"])
+        elif self._ef:
+            # the residual was committed at dispatch assuming this upload
+            # would be aggregated — fold the discarded components back
+            self._ef_state = self._ef_restore(
+                self._ef_state, jnp.asarray(ev.client_id),
+                ev.payload["delta"])
+
+    def _flush_buffer(self, buffered, stale, weights, *,
+                      dropped: int = 0, discarded: int = 0) -> dict:
+        """Aggregate a full buffer into one server version: the jitted
+        decode-aggregate flush, ``advance_server``, and the round record
+        (history + trace).  Shared by the round-shaped loop above and the
+        continuous-traffic runtime's policy-driven flushes."""
+        sched, t = self.scheduler, self.tracer
+        rnum = self.server.round + 1   # the round this flush produces
 
         with t.span("flush", round=rnum, sim_time=sched.now):
             # stack the buffered wire messages client-axis-first; the jitted
@@ -320,7 +351,7 @@ class AsyncFederatedExperiment(FedExperiment):
                        state_peak=self._ef_store.peak_resident,
                        state_spills=self._ef_store.spills,
                        state_restores=self._ef_store.restores)
-        if self.eval_fn is not None:
+        if self.eval_fn is not None and self._flush_eval:
             with t.span("eval", round=rnum, sim_time=sched.now):
                 rec.update({k: float(v) for k, v in
                             self.eval_fn(self.server.params).items()})

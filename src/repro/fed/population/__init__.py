@@ -5,7 +5,8 @@ real config knob (``FedConfig.population_size`` / ``cohort_size`` /
 ``state_budget``) whose cost scales with the cohort, not the id space."""
 from repro.fed.population.directory import (
     AvailabilitySampler, ClientPopulation, SAMPLERS, UniformSampler,
-    WeightedSampler, make_population, resolve_population,
+    WeightedSampler, hourly_availability, load_hourly_trace,
+    make_population, resolve_population,
 )
 from repro.fed.population.state import (
     ClientStateStore, DenseClientStore, make_client_store,
@@ -16,7 +17,8 @@ from repro.fed.population.batches import (
 
 __all__ = [
     "AvailabilitySampler", "ClientPopulation", "SAMPLERS", "UniformSampler",
-    "WeightedSampler", "make_population", "resolve_population",
+    "WeightedSampler", "hourly_availability", "load_hourly_trace",
+    "make_population", "resolve_population",
     "ClientStateStore",
     "DenseClientStore", "make_client_store",
     "stage_client_population_batches", "stage_population_batches",

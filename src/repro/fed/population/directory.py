@@ -23,6 +23,7 @@ historical draw order bitwise-intact.
 """
 from __future__ import annotations
 
+import os
 from typing import Callable, Optional
 
 import numpy as np
@@ -123,6 +124,73 @@ class WeightedSampler:
         return cand[np.argsort(-keys, kind="stable")[:k]].astype(np.int64)
 
 
+def _mix_u01(ids: np.ndarray, hour: int) -> np.ndarray:
+    """Deterministic per-(id, hour) uniforms in [0, 1) — a cheap integer
+    hash (splitmix-style multiply/xor), invariant to population size and
+    to evaluation order, so fractional availability tables resolve to a
+    stable per-client on/off decision each hour."""
+    x = (np.asarray(ids, np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+         + np.uint64(hour) * np.uint64(0xBF58476D1CE4E5B9))
+    x ^= x >> np.uint64(31)
+    x *= np.uint64(0x94D049BB133111EB)
+    x ^= x >> np.uint64(29)
+    return (x >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+
+
+def load_hourly_trace(path: str) -> np.ndarray:
+    """Load an empirical per-hour availability table from a trace file:
+    ``.npy``/``.npz`` (first array) or a text/CSV table of numbers.  Rows
+    are hours; an optional second axis is the timezone/device bucket."""
+    p = str(path)
+    if p.endswith(".npy"):
+        return np.load(p)
+    if p.endswith(".npz"):
+        with np.load(p) as z:
+            return z[z.files[0]]
+    return np.loadtxt(p, delimiter="," if p.endswith(".csv") else None)
+
+
+def hourly_availability(table, *, hour_unit: float = 1.0,
+                        ) -> Callable[[np.ndarray, float], np.ndarray]:
+    """An ``available_fn(ids, t)`` from an empirical per-hour table (e.g.
+    device-usage fractions measured from a real fleet).
+
+    ``table`` is ``(H,)`` or ``(H, B)`` — a str/PathLike loads through
+    ``load_hourly_trace``.  Hour ``floor(t / hour_unit) % H`` indexes the
+    first axis (the table wraps, i.e. it is one diurnal/weekly cycle):
+
+    * ``(H, B)`` boolean/0-1 masks: client ``id`` belongs to timezone
+      bucket ``id % B`` and is available iff ``table[hour, id % B]``;
+    * ``(H,)`` fractions in [0, 1]: each client resolves the fraction with
+      its own deterministic per-(id, hour) uniform, so an 0.3 hour keeps
+      ~30% of the fleet online — the *same* 30% every time that hour is
+      asked about.
+    """
+    if isinstance(table, (str, os.PathLike)):
+        table = load_hourly_trace(table)
+    table = np.asarray(table)
+    if table.ndim not in (1, 2) or table.shape[0] < 1:
+        raise ValueError(
+            f"hourly table must be (H,) or (H, B) with H >= 1, "
+            f"got shape {table.shape}")
+    if hour_unit <= 0:
+        raise ValueError(f"hour_unit must be > 0, got {hour_unit}")
+    if table.ndim == 1 and (table.min() < 0 or table.max() > 1):
+        raise ValueError(
+            "fractional (H,) availability values must lie in [0, 1], "
+            f"got range [{table.min()}, {table.max()}]")
+    hours = table.shape[0]
+
+    def available_fn(ids: np.ndarray, t: float) -> np.ndarray:
+        ids = np.asarray(ids)
+        hour = int(np.floor(float(t) / hour_unit)) % hours
+        if table.ndim == 2:
+            return np.asarray(table[hour, ids % table.shape[1]], bool)
+        return _mix_u01(ids, hour) < float(table[hour])
+
+    return available_fn
+
+
 class AvailabilitySampler:
     """Cohorts restricted to an availability trace.
 
@@ -131,13 +199,24 @@ class AvailabilitySampler:
     simulated clock in the async one) — e.g. diurnal cycles as a function of
     ``client_id % timezone_buckets``.  Candidates are streamed uniformly and
     filtered; a trace too sparse to fill the cohort raises instead of
-    spinning.
+    spinning.  ``from_hourly`` builds the mask from an empirical per-hour
+    availability array (trace-file-driven device-usage data) instead of a
+    synthetic callable.
     """
 
     def __init__(self, available_fn: Callable[[np.ndarray, float], np.ndarray],
                  max_rounds: int = _MAX_REJECT_ROUNDS):
         self.available_fn = available_fn
         self.max_rounds = int(max_rounds)
+
+    @classmethod
+    def from_hourly(cls, table, *, hour_unit: float = 1.0,
+                    max_rounds: int = _MAX_REJECT_ROUNDS
+                    ) -> "AvailabilitySampler":
+        """Sampler over an empirical per-hour availability table (array,
+        or a trace file path — see ``hourly_availability``)."""
+        return cls(hourly_availability(table, hour_unit=hour_unit),
+                   max_rounds=max_rounds)
 
     def sample(self, rng: np.random.Generator, size: int, k: int, *,
                t: float = 0) -> np.ndarray:

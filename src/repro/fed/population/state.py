@@ -63,7 +63,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.store import load_pytree, save_pytree
 from repro.core.algorithms import (
-    ClientStateSpec, state_export, state_import_many,
+    ClientStateSpec, state_export, state_import, state_import_many,
 )
 
 
@@ -77,6 +77,8 @@ class DenseClientStore:
         self.budget = int(population_size)
         self.population_size = int(population_size)
         self.state = proto.init(params, population_size)
+        # zero-init template: what evict_client resets a departed row to
+        self._fresh = state_export(proto, proto.init(params, 1), 0)
         self.spills = 0
         self.restores = 0
         self._touched: set = set()
@@ -107,6 +109,17 @@ class DenseClientStore:
 
     def flush_io(self) -> None:
         pass
+
+    def evict_client(self, cid: int) -> bool:
+        """Churn departure: forget ``cid``'s persistent state.  Dense slots
+        are client ids, so the row is reset to the spec's zero-init — a
+        rejoining client starts fresh, exactly like a never-seen one."""
+        cid = int(cid)
+        if cid not in self._touched:
+            return False
+        self._touched.discard(cid)
+        self.state = state_import(self.proto, self.state, cid, self._fresh)
+        return True
 
 
 class _Done:
@@ -471,6 +484,45 @@ class ClientStateStore:
         for fut in self._cleanup_futs:
             fut.result()
         self._cleanup_futs = []
+
+    # ----------------------------------------------------------------- churn
+
+    def evict_client(self, cid: int) -> bool:
+        """Churn departure: drop ``cid``'s persistent state wherever it
+        lives — resident slot (freed; the stale row is only ever overwritten
+        by the next acquire's graft), per-client spill file (unlinked), or
+        group archive row (unlinked from the group, which is deleted once
+        empty).  Returns whether the client had any state to forget."""
+        cid = int(cid)
+        if cid in self._pending:
+            raise RuntimeError(
+                f"evict_client({cid}) with its deferred acquire still "
+                "pending — drain collect_pending first")
+        had = False
+        if cid in self._slot_of:
+            self._free.append(self._slot_of.pop(cid))
+            had = True
+        if cid in self._spilled:
+            self._spilled.discard(cid)
+            fut = self._row_futs.pop(cid, None)
+            if fut is not None:
+                fut.result()
+            try:
+                os.unlink(self._spill_path(cid))
+            except FileNotFoundError:
+                pass
+            had = True
+        if cid in self._group_of:
+            path, _ = self._group_of.pop(cid)
+            with self._io_lock:
+                self._inflight.pop(cid, None)
+            live = self._group_live.get(path)
+            if live is not None:
+                live.discard(cid)
+                if not live:
+                    self._drop_group(path)
+            had = True
+        return had
 
 
 def make_client_store(proto: Optional[ClientStateSpec], params,

@@ -13,8 +13,14 @@ Event schema (one JSON object per line under ``JsonlSink``):
   common        event, run_id, seq
   span          phase, dur_s, round?, client_id?, chunk?, sim_time?
   round         round, metrics{...}, telemetry{...}?, sim_time?
-  client_dropped  client_id, reason ("dropout"|"max_staleness"),
-                  version, sim_time?
+  client_dropped  client_id, reason ("dropout"|"max_staleness"|
+                  "client_left"|"algo_swap"), version, sim_time?
+  client_join   client_id, sim_time?        (churn: id became active)
+  client_leave  client_id, in_flight, sim_time?  (churn: id departed;
+                  in_flight work, if any, is voided and later traced as a
+                  client_dropped with reason "client_left")
+  anytime_eval  metrics{...}, sim_time, round?   (continuous-traffic
+                  online eval sampled by simulated time, fed.traffic)
   run_start     runtime, algorithm?, scenario?
 
 A disabled tracer (no sinks) is the default on every experiment: spans
@@ -30,8 +36,9 @@ import time
 import uuid
 from typing import Optional
 
-EVENT_TYPES = ("run_start", "span", "round", "client_dropped")
-DROP_REASONS = ("dropout", "max_staleness")
+EVENT_TYPES = ("run_start", "span", "round", "client_dropped",
+               "client_join", "client_leave", "anytime_eval")
+DROP_REASONS = ("dropout", "max_staleness", "client_left", "algo_swap")
 
 # canonical phase names; the sync runtime fuses local update, wire encode
 # and aggregation into one jitted call traced as a single "update" span.
@@ -125,6 +132,38 @@ class Tracer:
             fields["sim_time"] = float(sim_time)
         self.emit("client_dropped", **fields)
 
+    def client_join(self, client_id: int, *,
+                    sim_time: Optional[float] = None) -> None:
+        """Churn: ``client_id`` joined the active population."""
+        if not self.sinks:
+            return
+        fields = {"client_id": int(client_id)}
+        if sim_time is not None:
+            fields["sim_time"] = float(sim_time)
+        self.emit("client_join", **fields)
+
+    def client_leave(self, client_id: int, *, in_flight: bool = False,
+                     sim_time: Optional[float] = None) -> None:
+        """Churn: ``client_id`` left; ``in_flight`` says whether its pending
+        dispatch was voided (that work surfaces later as a
+        ``client_dropped`` with reason ``"client_left"``)."""
+        if not self.sinks:
+            return
+        fields = {"client_id": int(client_id), "in_flight": bool(in_flight)}
+        if sim_time is not None:
+            fields["sim_time"] = float(sim_time)
+        self.emit("client_leave", **fields)
+
+    def anytime_eval(self, metrics: dict, *, sim_time: float,
+                     round: Optional[int] = None) -> None:
+        """Online eval sampled by simulated time (continuous traffic)."""
+        if not self.sinks:
+            return
+        fields = {"metrics": metrics, "sim_time": float(sim_time)}
+        if round is not None:
+            fields["round"] = int(round)
+        self.emit("anytime_eval", **fields)
+
     # ------------------------------------------------------- checkpointing
 
     def state(self) -> dict:
@@ -151,6 +190,9 @@ _REQUIRED = {
     "span": ("phase", "dur_s"),
     "round": ("round", "metrics"),
     "client_dropped": ("client_id", "reason", "version"),
+    "client_join": ("client_id",),
+    "client_leave": ("client_id", "in_flight"),
+    "anytime_eval": ("metrics", "sim_time"),
     "run_start": (),
 }
 
